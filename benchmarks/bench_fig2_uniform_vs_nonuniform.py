@@ -1,0 +1,30 @@
+"""Paper Fig. 2: uniform vs non-uniform PWL of GELU, 5 breakpoints, [-2, 2].
+The paper reports ~7x MSE improvement; we also sweep other functions."""
+from __future__ import annotations
+
+import repro  # noqa: F401
+from repro.core import fit, functions as F, pwl
+
+
+def main() -> None:
+    print("function,range,n_bp,uniform_mse,nonuniform_mse,improvement")
+    cfg = fit.FitConfig(max_steps=1500, max_rounds=3)
+    for name, lo, hi, n in [
+        ("gelu", -2, 2, 5),      # the paper's exact Fig. 2 cell
+        ("gelu", -8, 8, 16),
+        ("silu", -8, 8, 16),
+        ("tanh", -8, 8, 16),
+        ("exp", -10, 0.1, 16),
+    ]:
+        spec = F.get(name)
+        uni = pwl.make_uniform_table(spec, n, float(lo), float(hi))
+        mse_u = pwl.mse(uni, spec, lo, hi)
+        r = fit.fit(name, n, float(lo), float(hi), cfg)
+        print(
+            f"{name},[{lo};{hi}],{n},{mse_u:.3e},{r.mse:.3e},{mse_u/r.mse:.1f}x",
+            flush=True,
+        )
+
+
+if __name__ == "__main__":
+    main()

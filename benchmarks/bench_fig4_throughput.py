@@ -1,0 +1,56 @@
+"""Paper Fig. 4 analogue: PWL activation throughput vs input size & LTC depth.
+
+On real TPU the kernel saturates the VPU; on this CPU harness wall-times are
+indicative only, so we also report the STRUCTURAL numbers that transfer:
+vector ops per element per config (decode+fetch+MADD) and the compiled
+FLOP/transcendental counts of exact vs PWL GELU at equal shapes (the paper's
+"complex activation at ReLU cost" claim, in compiled-op form)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro.core import functions as F, pwl, registry
+from repro.kernels import ops, ref
+
+from .common import emit, time_fn
+
+SIZES = [2**i for i in range(8, 21, 2)]
+DEPTHS = [8, 16, 32, 64]
+
+
+def compiled_costs(fn, x):
+    c = jax.jit(fn).lower(x).compile().cost_analysis() or {}
+    return c.get("flops", 0.0), c.get("transcendentals", 0.0)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    spec = F.get("gelu")
+    for depth in DEPTHS:
+        table = pwl.make_uniform_table(spec, depth)
+        for n in SIZES:
+            x = jax.random.normal(jax.random.PRNGKey(0), (n,)) * 4
+            us = time_fn(lambda a: ops.pwl_activation(a, table), x, iters=5)
+            gact = n / us / 1e3  # GAct/s
+            emit(f"pwl_kernel_d{depth}_n{n}", us, f"{gact:.3f} GAct/s")
+        # structural: ops/element = n compares + 2n FMA (delta) + 1 MADD
+        emit(f"pwl_structural_d{depth}", 0.0, f"{3*depth+2} vec-ops/elt")
+
+    # compiled-op comparison at a fixed shape: exact vs PWL (jnp path)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4096, 1024))
+    table = registry.get_table("gelu", 32)
+    f_exact, t_exact = compiled_costs(lambda a: spec.fn(a), x)
+    f_pwl, t_pwl = compiled_costs(lambda a: ref.pwl_activation_ref(a, table), x)
+    emit("gelu_exact_compiled", 0.0, f"flops={f_exact:.3g};transcendentals={t_exact:.3g}")
+    emit("gelu_pwl32_compiled", 0.0, f"flops={f_pwl:.3g};transcendentals={t_pwl:.3g}")
+    # wall-clock on CPU for reference
+    us_e = time_fn(jax.jit(spec.fn), x, iters=5)
+    us_p = time_fn(lambda a: ops.pwl_activation(a, table), x, iters=5)
+    emit("gelu_exact_wall", us_e, "")
+    emit("gelu_pwl32_kernel_wall", us_p, "interpret-mode CPU; TPU perf via roofline")
+
+
+if __name__ == "__main__":
+    main()

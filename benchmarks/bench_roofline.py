@@ -1,0 +1,44 @@
+"""Roofline summary: renders EXPERIMENTS.md Sec. Roofline from the dry-run
+JSON artifacts (run `python -m repro.launch.dryrun --all` first)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+# optimized results (experiments/final) take precedence; baseline fills gaps
+DIRS = [pathlib.Path("experiments/dryrun"), pathlib.Path("experiments/final"),
+        pathlib.Path("experiments/hillclimb")]
+
+
+def rows():
+    merged = {}
+    for d in DIRS:
+        if not d.exists():
+            continue
+        for p in sorted(d.glob("*.json")):
+            r = json.loads(p.read_text())
+            key = (r.get("arch"), r.get("shape"), r.get("mesh"))
+            if r.get("status") == "ok" or key not in merged:
+                merged[key] = r
+    return [merged[k] for k in sorted(merged, key=str)]
+
+
+def main() -> None:
+    print(
+        "arch,shape,mesh,bottleneck,t_compute_ms,t_memory_ms,t_collective_ms,"
+        "useful_ratio,mfu_at_bound,peak_analytic_gb,status"
+    )
+    for r in rows():
+        if r.get("status") != "ok":
+            print(f"{r['arch']},{r['shape']},{r['mesh']},,,,,,,,{r['status']}")
+            continue
+        print(
+            f"{r['arch']},{r['shape']},{r['mesh']},{r['bottleneck']},"
+            f"{r['t_compute_ms']:.1f},{r['t_memory_ms']:.1f},{r['t_collective_ms']:.2f},"
+            f"{r['useful_ratio']:.3f},{r['mfu_at_bound']:.3f},"
+            f"{r.get('peak_analytic_gb', 0):.2f},ok"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall-time (us) of a jitted callable."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+def sq_aae(fn, spec, lo, hi, n=16384) -> float:
+    x = jnp.linspace(lo, hi, n)
+    return float(jnp.mean(jnp.abs(fn(x) - spec.fn(x)))) ** 2

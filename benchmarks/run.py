@@ -1,0 +1,39 @@
+"""Benchmark runner: one benchmark per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Each benchmark prints CSV (`name,us_per_call,derived` or table-specific
+columns).  The roofline benchmark reads experiments/dryrun/*.json
+(produced by `python -m repro.launch.dryrun --all`).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+BENCHMARKS = [
+    ("fig2_uniform_vs_nonuniform", "benchmarks.bench_fig2_uniform_vs_nonuniform"),
+    ("table2_sota", "benchmarks.bench_table2_sota"),
+    ("fig5_error_sweep", "benchmarks.bench_fig5_error_sweep"),
+    ("fig4_throughput", "benchmarks.bench_fig4_throughput"),
+    ("table3_model_accuracy", "benchmarks.bench_table3_model_accuracy"),
+    ("roofline", "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    for name, module in BENCHMARKS:
+        if args.only and args.only != name:
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        __import__(module, fromlist=["main"]).main()
+        print(f"===== {name} done in {time.time()-t0:.1f}s =====", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Ablation: train the same model with exact vs PWL activations and compare
+loss trajectories (the paper's Table III claim — approximation is ~lossless —
+checked in *training*, which is stricter than the paper's inference-only
+evaluation).
+
+    PYTHONPATH=src python examples/ablation_pwl_vs_exact.py [--steps 60]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro.configs import get_reduced_config
+from repro.data.pipeline import DataConfig, SyntheticLMData
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import build_train_step
+from repro.models import Model, ShapeCell
+from repro.optim import adamw
+
+
+def run(act_impl: str, steps: int, n_bp: int = 32):
+    cfg = get_reduced_config("repro-100m", act_impl=act_impl, act_breakpoints=n_bp)
+    mesh = make_host_mesh()
+    cell = ShapeCell("abl", 256, 8, "train")
+    opt = adamw.AdamWConfig(lr=1e-3, total_steps=steps, warmup_steps=5)
+    fn, in_sh, out_sh, structs, extra = build_train_step(cfg, mesh, cell, opt_cfg=opt, microbatches=1)
+    jstep = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                    donate_argnums=extra["donate_argnums"])
+    model = Model(cfg)
+    state = adamw.init_state(model.init(jax.random.PRNGKey(0)))
+    data = SyntheticLMData(DataConfig(vocab_size=cfg.vocab_size, seq_len=256, global_batch=8))
+    losses = []
+    for step in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
+        state, metrics = jstep(state, batch)
+        losses.append(float(metrics["loss"]))
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+    exact = run("exact", args.steps)
+    approx = run("pwl", args.steps)
+    print(f"{'step':>6} {'exact':>9} {'pwl':>9} {'delta':>9}")
+    for i in range(0, args.steps, max(args.steps // 10, 1)):
+        print(f"{i:>6} {exact[i]:>9.4f} {approx[i]:>9.4f} {approx[i]-exact[i]:>+9.4f}")
+    print(f"final: exact={exact[-1]:.4f} pwl={approx[-1]:.4f} "
+          f"delta={approx[-1]-exact[-1]:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

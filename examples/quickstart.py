@@ -1,0 +1,42 @@
+"""Quickstart: fit a non-uniform PWL table to GELU (the paper's core loop),
+compare against the uniform baseline, and evaluate it through the Pallas
+kernel — 60 seconds on a laptop CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro.core import fit, functions as F, pwl
+from repro.kernels import ops
+
+
+def main():
+    spec = F.get("gelu")
+
+    # 1. paper Fig. 2 setup: 5 breakpoints on [-2, 2]
+    cfg = fit.FitConfig(max_steps=1500, max_rounds=3)
+    result = fit.fit("gelu", 5, -2.0, 2.0, cfg)
+    uniform = pwl.make_uniform_table(spec, 5, -2.0, 2.0)
+    mse_u = pwl.mse(uniform, spec, -2.0, 2.0)
+    print(f"uniform MSE      = {mse_u:.3e}")
+    print(f"non-uniform MSE  = {result.mse:.3e}")
+    print(f"improvement      = {mse_u / result.mse:.1f}x   (paper Fig. 2: ~7x)")
+    print(f"breakpoints      = {result.table.bp}")
+
+    # 2. evaluate through the Pallas kernel (interpret mode on CPU)
+    x = jnp.linspace(-4, 4, 1024)
+    y_kernel = ops.pwl_activation(x, result.table)
+    y_exact = spec.fn(x)
+    print(f"kernel max |err| vs exact GELU on [-4,4]: "
+          f"{float(jnp.max(jnp.abs(y_kernel - y_exact))):.2e}")
+
+    # 3. production tables ship pre-fitted (32 breakpoints):
+    from repro.core import registry
+
+    table32 = registry.get_table("gelu", 32)
+    print(f"shipped 32-bp table MSE on [-8,8]: {pwl.mse(table32, spec, -8, 8):.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Batched serving example: prefill + greedy decode with PWL activations.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+from repro.launch.serve import serve
+
+
+if __name__ == "__main__":
+    sys.exit(serve(["--arch", "repro-100m", "--batch", "4", "--prompt-len", "32",
+                    "--max-new", "16", "--act-impl", "pwl"]))

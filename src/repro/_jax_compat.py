@@ -1,0 +1,56 @@
+"""Compatibility shims for this environment's version-mixed jax install.
+
+The installed ``jax._src.lax.slicing`` carries the *pre-batching-dims*
+``GatherDimensionNumbers``/``ScatterDimensionNumbers`` NamedTuples (3/4 fields,
+no ``operand_batching_dims``), while other modules (``lax.py``'s sort JVP rule)
+were built against the newer API and construct them with
+``operand_batching_dims=...`` kwargs.  Without a shim, ``jax.grad`` through any
+``sort``/``argsort`` raises ``TypeError: GatherDimensionNumbers.__new__() got
+an unexpected keyword argument 'operand_batching_dims'``.
+
+The shim wraps the constructors to accept-and-drop *empty* batching dims (the
+only case the old gather lowering can express).  Non-empty batching dims would
+be silently mis-lowered by the old code, so we raise loudly instead: in
+practice that only occurs for grad-through-sort of >=2-D arrays, which this
+codebase avoids (see core/fit.py — breakpoints are kept sorted outside the
+differentiated region).
+"""
+from __future__ import annotations
+
+import functools
+
+from jax._src.lax import slicing as _sl
+
+_PATCHED_FLAG = "_repro_compat_patched"
+
+
+def _wrap(cls, batching_fields: tuple[str, ...]):
+    @functools.wraps(cls)
+    def ctor(*args, **kwargs):
+        for f in batching_fields:
+            val = kwargs.pop(f, ())
+            if tuple(val):
+                raise NotImplementedError(
+                    f"{cls.__name__} with non-empty {f} is unsupported by this "
+                    "environment's jaxlib (old gather/scatter lowering). "
+                    "Avoid jax.grad through sort/argsort of >=2-D arrays."
+                )
+        return cls(*args, **kwargs)
+
+    return ctor
+
+
+def install() -> None:
+    """Idempotently patch the constructor call-sites inside jax."""
+    if getattr(_sl, _PATCHED_FLAG, False):
+        return
+    gdn, sdn = _sl.GatherDimensionNumbers, _sl.ScatterDimensionNumbers
+    if "operand_batching_dims" in getattr(gdn, "_fields", ()):
+        return  # healthy install; nothing to do
+    _sl.GatherDimensionNumbers = _wrap(
+        gdn, ("operand_batching_dims", "start_indices_batching_dims")
+    )
+    _sl.ScatterDimensionNumbers = _wrap(
+        sdn, ("operand_batching_dims", "scatter_indices_batching_dims")
+    )
+    setattr(_sl, _PATCHED_FLAG, True)

@@ -1,0 +1,43 @@
+"""Assigned-architecture configs.  ``get_config("<arch-id>")`` accepts the
+exact ids from the assignment brief (dashes/dots normalized to underscores)."""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "internvl2-1b",
+    "qwen2.5-32b",
+    "stablelm-1.6b",
+    "olmo-1b",
+    "gemma3-1b",
+    "olmoe-1b-7b",
+    "phi3.5-moe-42b-a6.6b",
+    "whisper-small",
+    "mamba2-2.7b",
+    "jamba-v0.1-52b",
+]
+
+
+def _modname(arch_id: str) -> str:
+    return arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str, **overrides):
+    mod = importlib.import_module(f"repro.configs.{_modname(arch_id)}")
+    cfg = mod.CONFIG
+    if overrides:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def get_reduced_config(arch_id: str, **overrides):
+    """Small same-family config for CPU smoke tests."""
+    mod = importlib.import_module(f"repro.configs.{_modname(arch_id)}")
+    cfg = mod.reduced()
+    if overrides:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg

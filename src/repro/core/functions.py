@@ -1,0 +1,119 @@
+"""Exact activation functions + asymptote metadata for PWL boundary conditions.
+
+Each entry describes one target function f with:
+  - ``fn``: the exact jnp implementation (the oracle the PWL table approximates),
+  - asymptote slopes/offsets for x -> ±inf, used by the paper's boundary
+    condition (Sec. IV):  m_l = lim f(x)/x,  c_l = lim (f(x) - m_l x)  and the
+    right-hand analogues.  The boundary *values* then follow from the learned
+    boundary breakpoints:  v_0 = m_l p_0 + c_l,  v_{n-1} = m_r p_{n-1} + c_r.
+  - ``default_range``: the interpolation interval used by the paper (Fig. 5).
+
+``right_is_edge`` marks functions (exp) whose right limit is a *range edge*
+rather than an asymptote: there we pin the boundary segment to the tangent line
+at the edge so the approximation stays first-order accurate just outside.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax.numpy as jnp
+
+_SQRT_2_OVER_PI = math.sqrt(2.0 / math.pi)
+_INV_SQRT2 = 1.0 / math.sqrt(2.0)
+
+
+def _gelu(x):
+    from jax.scipy.special import erf
+
+    return 0.5 * x * (1.0 + erf(x * _INV_SQRT2))
+
+
+def _gelu_tanh(x):
+    return 0.5 * x * (1.0 + jnp.tanh(_SQRT_2_OVER_PI * (x + 0.044715 * x**3)))
+
+
+def _silu(x):
+    return x / (1.0 + jnp.exp(-x))
+
+
+def _sigmoid(x):
+    return 1.0 / (1.0 + jnp.exp(-x))
+
+
+def _tanh(x):
+    return jnp.tanh(x)
+
+
+def _exp(x):
+    return jnp.exp(x)
+
+
+def _softplus(x):
+    return jnp.logaddexp(x, 0.0)
+
+
+def _hardswish(x):
+    return x * jnp.clip(x + 3.0, 0.0, 6.0) / 6.0
+
+
+def _elu(x):
+    return jnp.where(x > 0, x, jnp.expm1(x))
+
+
+def _mish(x):
+    return x * jnp.tanh(_softplus(x))
+
+
+@dataclasses.dataclass(frozen=True)
+class FunctionSpec:
+    name: str
+    fn: Callable
+    # asymptote: f(x) ~ m*x + c for x -> -inf / +inf
+    m_left: float
+    c_left: float
+    m_right: float
+    c_right: float
+    default_range: tuple[float, float]
+    right_is_edge: bool = False  # right boundary pinned to tangent at range edge
+    left_is_edge: bool = False
+
+    def asymptote_left(self, p0):
+        return self.m_left * p0 + self.c_left
+
+    def asymptote_right(self, pn):
+        return self.m_right * pn + self.c_right
+
+
+REGISTRY: dict[str, FunctionSpec] = {}
+
+
+def _register(spec: FunctionSpec) -> FunctionSpec:
+    REGISTRY[spec.name] = spec
+    return spec
+
+
+GELU = _register(FunctionSpec("gelu", _gelu, 0.0, 0.0, 1.0, 0.0, (-8.0, 8.0)))
+GELU_TANH = _register(
+    FunctionSpec("gelu_tanh", _gelu_tanh, 0.0, 0.0, 1.0, 0.0, (-8.0, 8.0))
+)
+SILU = _register(FunctionSpec("silu", _silu, 0.0, 0.0, 1.0, 0.0, (-8.0, 8.0)))
+SIGMOID = _register(FunctionSpec("sigmoid", _sigmoid, 0.0, 0.0, 0.0, 1.0, (-8.0, 8.0)))
+TANH = _register(FunctionSpec("tanh", _tanh, 0.0, -1.0, 0.0, 1.0, (-8.0, 8.0)))
+# exp on [-10, 0.1]: the Softmax use-case (exp(x - max) <= e^0.1); left asymptote
+# is y=0, right end is a range edge (paper Sec. V-B).
+EXP = _register(
+    FunctionSpec("exp", _exp, 0.0, 0.0, math.e**0.1, 0.0, (-10.0, 0.1), right_is_edge=True)
+)
+SOFTPLUS = _register(FunctionSpec("softplus", _softplus, 0.0, 0.0, 1.0, 0.0, (-8.0, 8.0)))
+HARDSWISH = _register(FunctionSpec("hardswish", _hardswish, 0.0, 0.0, 1.0, 0.0, (-8.0, 8.0)))
+ELU = _register(FunctionSpec("elu", _elu, 0.0, -1.0, 1.0, 0.0, (-8.0, 8.0)))
+MISH = _register(FunctionSpec("mish", _mish, 0.0, 0.0, 1.0, 0.0, (-8.0, 8.0)))
+
+
+def get(name: str) -> FunctionSpec:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown activation '{name}'; known: {sorted(REGISTRY)}") from None

@@ -1,0 +1,57 @@
+"""Generate fitted PWL table artifacts for the registry cache.
+
+Usage:  PYTHONPATH=src python -m repro.core.gen_tables [--fast]
+
+Writes src/repro/core/tables/<fn>_<n>bp.npz for the activation functions the
+model zoo uses, at the paper's evaluated breakpoint counts.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from . import fit, pwl
+from .registry import TABLE_DIR
+
+FUNCTIONS = ["gelu", "gelu_tanh", "silu", "sigmoid", "tanh", "exp", "softplus", "hardswish"]
+BREAKPOINTS = [8, 16, 32, 64]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="fewer steps/rounds (CI)")
+    ap.add_argument("--functions", nargs="*", default=FUNCTIONS)
+    ap.add_argument("--breakpoints", nargs="*", type=int, default=BREAKPOINTS)
+    args = ap.parse_args(argv)
+
+    TABLE_DIR.mkdir(exist_ok=True)
+    cfg = (
+        fit.FitConfig(max_steps=1000, max_rounds=2, init="curvature")
+        if args.fast
+        else fit.FitConfig(max_steps=4000, max_rounds=6, init="curvature")
+    )
+    for name in args.functions:
+        for n in args.breakpoints:
+            out = TABLE_DIR / f"{name}_{n}bp.npz"
+            t0 = time.time()
+            r = fit.fit(name, n, cfg=cfg)
+            np.savez(
+                out,
+                bp=np.asarray(r.table.bp),
+                m=np.asarray(r.table.m),
+                q=np.asarray(r.table.q),
+                mse=r.mse,
+                mae=r.mae,
+            )
+            print(
+                f"{name:10s} {n:3d}bp  mse={r.mse:.3e} mae={r.mae:.3e} "
+                f"({time.time()-t0:.1f}s) -> {out.name}",
+                flush=True,
+            )
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,200 @@
+"""Piecewise-linear table representation and pure-JAX evaluation.
+
+A ``PWLTable`` holds the paper's interpolation (Sec. IV):
+
+    f̂(x) = m_l (x - p_0) + v_0                      x <= p_0
+         = (v_{i+1}-v_i)/(p_{i+1}-p_i) (x-p_i)+v_i   p_i < x < p_{i+1}
+         = m_r (x - p_{n-1}) + v_{n-1}               x >= p_{n-1}
+
+with n breakpoints p_i and values v_i = f̂(p_i).  There are n+1 segments.
+
+Two evaluation forms:
+  * interpolation form (p, v, m_l, m_r) — what the optimizer trains;
+  * coefficient form (p, m, q) with per-segment ``y = m_i x + q_i`` — what the
+    hardware (and our Pallas kernel) consumes.  ``m``/``q`` have n+1 entries;
+    segment i covers (p_{i-1}, p_i] with sentinel p_{-1} = -inf, p_n = +inf.
+
+Address decode (TPU adaptation of the paper's BST): ``idx = Σ_i (x > p_i)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import functions as F
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PWLTable:
+    """Coefficient-form PWL table: the deployable artifact.
+
+    Attributes:
+      bp:  (n,) sorted breakpoints.
+      m:   (n+1,) per-segment slopes.
+      q:   (n+1,) per-segment intercepts (y = m*x + q).
+      name: target function name (metadata).
+    """
+
+    bp: jax.Array
+    m: jax.Array
+    q: jax.Array
+    name: str = "?"
+
+    def tree_flatten(self):
+        return (self.bp, self.m, self.q), self.name
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, name=aux)
+
+    @property
+    def n_breakpoints(self) -> int:
+        return self.bp.shape[0]
+
+    @property
+    def n_segments(self) -> int:
+        return self.bp.shape[0] + 1
+
+    def astype(self, dtype) -> "PWLTable":
+        return PWLTable(
+            self.bp.astype(dtype), self.m.astype(dtype), self.q.astype(dtype), self.name
+        )
+
+    def __call__(self, x):
+        return eval_coeff(x, self)
+
+
+def params_to_coeffs(
+    p: jax.Array,
+    v: jax.Array,
+    m_l: float | jax.Array,
+    m_r: float | jax.Array,
+    name: str = "?",
+) -> PWLTable:
+    """Convert interpolation form -> coefficient form.
+
+    Inner segment i (between p_{i-1}, p_i for i=1..n-1):
+        m = (v_i - v_{i-1}) / (p_i - p_{i-1}),  q = v_{i-1} - m p_{i-1}.
+    Leftmost:  y = m_l (x - p_0) + v_0  ->  m = m_l, q = v_0 - m_l p_0.
+    Rightmost: y = m_r (x - p_{n-1}) + v_{n-1}.
+    """
+    dp = p[1:] - p[:-1]
+    dv = v[1:] - v[:-1]
+    m_in = dv / jnp.where(dp == 0, 1.0, dp)
+    q_in = v[:-1] - m_in * p[:-1]
+    m_l = jnp.asarray(m_l, p.dtype)
+    m_r = jnp.asarray(m_r, p.dtype)
+    m = jnp.concatenate([m_l[None], m_in, m_r[None]])
+    q = jnp.concatenate(
+        [(v[0] - m_l * p[0])[None], q_in, (v[-1] - m_r * p[-1])[None]]
+    )
+    return PWLTable(bp=p, m=m, q=q, name=name)
+
+
+def eval_coeff(x: jax.Array, table: PWLTable) -> jax.Array:
+    """Evaluate coefficient-form PWL: compare-count decode + gather + MADD.
+
+    This is the semantic reference for the Pallas kernel (kernels/ref.py wraps
+    it).  O(n) broadcast compares, one gather, one fused multiply-add.
+    """
+    xf = x.astype(table.m.dtype)
+    idx = jnp.sum(xf[..., None] > table.bp, axis=-1)
+    m = jnp.take(table.m, idx)
+    q = jnp.take(table.q, idx)
+    return (m * xf + q).astype(x.dtype)
+
+
+def eval_interp(
+    x: jax.Array,
+    p: jax.Array,
+    v: jax.Array,
+    m_l: float | jax.Array,
+    m_r: float | jax.Array,
+) -> jax.Array:
+    """Evaluate interpolation form directly (differentiable w.r.t. p, v).
+
+    Used inside the fit loop so gradients flow to breakpoints and values.
+    """
+    n = p.shape[0]
+    # searchsorted-style decode. idx in [0, n]: segment index.
+    idx = jnp.sum(x[..., None] > p, axis=-1)
+    im = jnp.clip(idx, 1, n - 1)  # inner segment right-endpoint index
+    p0 = p[im - 1]
+    p1 = p[im]
+    v0 = v[im - 1]
+    v1 = v[im]
+    slope_in = (v1 - v0) / (p1 - p0)
+    y_in = slope_in * (x - p0) + v0
+    y_l = m_l * (x - p[0]) + v[0]
+    y_r = m_r * (x - p[-1]) + v[-1]
+    return jnp.where(idx == 0, y_l, jnp.where(idx == n, y_r, y_in))
+
+
+def make_uniform_table(
+    spec: F.FunctionSpec,
+    n_breakpoints: int,
+    lo: Optional[float] = None,
+    hi: Optional[float] = None,
+    dtype=jnp.float32,
+) -> PWLTable:
+    """Uniform-breakpoint table with exact function values (the fit's init and
+    the prior-work baseline: uniform segments, MSB-style O(1) addressing)."""
+    if lo is None or hi is None:
+        lo, hi = spec.default_range
+    p = jnp.linspace(lo, hi, n_breakpoints, dtype=jnp.float32)
+    v = spec.fn(p)
+    v = _apply_boundary_values(spec, p, v)
+    m_l, m_r = boundary_slopes(spec, p)
+    return params_to_coeffs(p, v, m_l, m_r, name=spec.name).astype(dtype)
+
+
+def boundary_slopes(spec: F.FunctionSpec, p: jax.Array):
+    """Paper Sec. IV boundary condition: outer slopes lie on the asymptotes.
+
+    For range-edge boundaries (exp right side) use the tangent at the edge."""
+    m_l = spec.m_left
+    m_r = spec.m_right
+    if spec.left_is_edge:
+        m_l = float(jax.grad(lambda t: spec.fn(t).sum())(jnp.float32(p[0])))
+    if spec.right_is_edge:
+        m_r = float(jax.grad(lambda t: spec.fn(t).sum())(jnp.float32(p[-1])))
+    return m_l, m_r
+
+
+def _apply_boundary_values(spec: F.FunctionSpec, p: jax.Array, v: jax.Array):
+    """Pin v_0 / v_{n-1} to the asymptote lines (or the exact edge value)."""
+    v0 = spec.fn(p[0]) if spec.left_is_edge else spec.asymptote_left(p[0])
+    vn = spec.fn(p[-1]) if spec.right_is_edge else spec.asymptote_right(p[-1])
+    return v.at[0].set(v0).at[-1].set(vn)
+
+
+def mse(
+    table_or_fn,
+    spec: F.FunctionSpec,
+    lo: float,
+    hi: float,
+    n_grid: int = 8192,
+) -> float:
+    """Continuous MSE  L = 1/(b-a) ∫ (f̂-f)² dx  via trapezoid on a dense grid."""
+    x = jnp.linspace(lo, hi, n_grid, dtype=jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32)
+    err = (table_or_fn(x) - spec.fn(x)) ** 2
+    return float(jnp.trapezoid(err, x) / (hi - lo))
+
+
+def mae(table_or_fn, spec: F.FunctionSpec, lo: float, hi: float, n_grid: int = 8192) -> float:
+    x = jnp.linspace(lo, hi, n_grid, dtype=jnp.float32)
+    return float(jnp.max(jnp.abs(table_or_fn(x) - spec.fn(x))))
+
+
+def table_to_numpy(table: PWLTable) -> dict:
+    return {
+        "bp": np.asarray(table.bp),
+        "m": np.asarray(table.m),
+        "q": np.asarray(table.q),
+        "name": table.name,
+    }

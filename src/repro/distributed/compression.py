@@ -1,0 +1,66 @@
+"""Gradient compression for the data-parallel sync (int8 + error feedback).
+
+Two tiers, matching what's real on TPU fleets:
+  1. **bf16 gradient reduction** — free in this codebase: compute is bf16, so
+     the backward all-reduces GSPMD inserts already move bf16 (half the f32
+     volume).  Nothing to do here; noted for completeness.
+  2. **int8 error-feedback compression** for the cross-pod (DCI) hop, where
+     bandwidth is ~10x scarcer than ICI.  Implemented as an explicit
+     shard_map'd all-reduce: per-leaf scale = max|g|/127 on each worker,
+     quantize, all-reduce int32, dequantize; the quantization residual is fed
+     back into the next step's gradient (error feedback keeps SGD unbiased in
+     the long run — Karimireddy et al., 2019).
+
+Used by the DP trainer in examples/train_compressed.py and tested on 8 fake
+host devices in tests/test_distributed.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _quantize(g, scale):
+    return jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+
+
+def _dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_leaf(g, axis_name: str):
+    """int8 error-feedback psum of one gradient leaf along `axis_name`.
+
+    Returns (mean_gradient, residual).  The residual (quantization error)
+    must be added to the same leaf's gradient next step.
+    """
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    # scales differ per worker: agree on the max so int8 grids align
+    scale = jax.lax.pmax(scale, axis_name)
+    q = _quantize(gf, scale)
+    residual = gf - _dequantize(q, scale)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.int32), axis_name)
+    mean = _dequantize(total, scale) / n.astype(jnp.float32)
+    return mean.astype(g.dtype), residual
+
+
+def compressed_grad_sync(grads: Any, residuals: Any, axis_name: str):
+    """Tree-wise int8 EF all-reduce: returns (synced_grads, new_residuals)."""
+
+    def one(g, r):
+        return compressed_psum_leaf(g + r.astype(g.dtype), axis_name)
+
+    pairs = jax.tree_util.tree_map(one, grads, residuals)
+    synced = jax.tree_util.tree_map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    new_res = jax.tree_util.tree_map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return synced, new_res
+
+
+def init_residuals(params: Any) -> Any:
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

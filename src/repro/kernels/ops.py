@@ -1,0 +1,93 @@
+"""jit'd public wrappers around the Pallas PWL kernels.
+
+Handles arbitrary input shapes (flatten -> pad to 8x128-aligned 2-D tiles ->
+kernel -> unpad), backend selection (interpret=True on CPU so the kernel body
+is validated everywhere; compiled Mosaic path on TPU), and table packing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pwl import PWLTable
+
+from . import pwl_act
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def pack_nonuniform(table: PWLTable):
+    """Pack (bp, m, q) into the kernel's delta layout: (bp, dmq)."""
+    m = np.asarray(table.m, np.float32)
+    q = np.asarray(table.q, np.float32)
+    dmq = np.empty((m.shape[0], 2), np.float32)
+    dmq[0, 0], dmq[0, 1] = m[0], q[0]
+    dmq[1:, 0] = np.diff(m)
+    dmq[1:, 1] = np.diff(q)
+    return jnp.asarray(np.asarray(table.bp, np.float32)), jnp.asarray(dmq)
+
+
+def pack_uniform(m, q):
+    return jnp.stack([jnp.asarray(m, jnp.float32), jnp.asarray(q, jnp.float32)], axis=-1)
+
+
+def _to_tiles(x, block):
+    """Flatten to 1-D, pad, and fold into a (rows, block_cols) 2-D layout."""
+    bm, bn = block
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    cols = bn
+    rows = -(-n // cols)
+    rows_pad = -(-rows // bm) * bm
+    pad = rows_pad * cols - n
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(rows_pad, cols), n
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _pwl_nonuniform_any(x, bp, dmq, block, interpret):
+    x2d, n = _to_tiles(x, block)
+    y2d = pwl_act.pwl_nonuniform_2d(x2d, bp, dmq, block=block, interpret=interpret)
+    return y2d.reshape(-1)[:n].reshape(x.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("lo", "hi", "block", "interpret"))
+def _pwl_uniform_any(x, dmq, lo, hi, block, interpret):
+    x2d, n = _to_tiles(x, block)
+    y2d = pwl_act.pwl_uniform_2d(x2d, dmq, lo, hi, block=block, interpret=interpret)
+    return y2d.reshape(-1)[:n].reshape(x.shape)
+
+
+def pwl_activation(
+    x: jax.Array,
+    table: PWLTable,
+    *,
+    block=pwl_act.DEFAULT_BLOCK,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Non-uniform PWL activation via the Pallas kernel (any shape/dtype)."""
+    if interpret is None:
+        interpret = _should_interpret()
+    bp, dmq = pack_nonuniform(table)
+    return _pwl_nonuniform_any(x, bp, dmq, block, interpret)
+
+
+def pwl_activation_uniform(
+    x: jax.Array,
+    m: jax.Array,
+    q: jax.Array,
+    lo: float,
+    hi: float,
+    *,
+    block=pwl_act.DEFAULT_BLOCK,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Uniform-addressing PWL baseline via the Pallas kernel."""
+    if interpret is None:
+        interpret = _should_interpret()
+    return _pwl_uniform_any(x, pack_uniform(m, q), float(lo), float(hi), block, interpret)

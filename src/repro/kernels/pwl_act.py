@@ -1,0 +1,132 @@
+"""Pallas TPU kernels for Flex-SFU PWL activation evaluation.
+
+TPU adaptation of the paper's datapath (DESIGN.md Sec. 2):
+
+  ASIC Flex-SFU                      TPU kernel (this file)
+  ---------------------------------  -----------------------------------------
+  BST address decode over breakpoint  delta-accumulation: the per-segment
+  SRAMs -> LUT address                coefficient is materialized directly as
+  LUT cluster -> (m_i, q_i)             c(x) = c_0 + sum_i (x > p_i) * dc_i
+  VPU MADD  y = m x + q               fused MADD epilogue  y = m(x)*x + q(x)
+
+The delta form *fuses* the paper's decode and LUT-fetch stages: ordered
+segments mean the coefficient of the segment containing x equals the base
+coefficient plus the sum of deltas of all breakpoints left of x.  Every step
+is a full-rate 8x128 VPU compare + 2 FMAs on a 2-D tile — no gather, no
+per-lane divergence, no MXU needed.  n breakpoints cost 3n vector ops/elt.
+
+The uniform-addressing baseline kernel (prior-work scheme the paper compares
+against) replaces the n compares with one affine index computation, but pays
+the same fetch cost on TPU (no per-lane SRAM): decode O(1), fetch O(n).
+
+Tables ride along as VMEM operands replicated to every grid step — they are
+tiny (<= 64 x 3 f32) — mirroring the paper's `ld.bp()/ld.cf()` preload.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile shape: 8x128-aligned, sized so x-tile + out-tile (f32) stay well under
+# VMEM (2 * 256*512*4B = 1 MiB) while amortizing grid overhead.
+DEFAULT_BLOCK = (256, 512)
+
+
+def _pwl_nonuniform_kernel(x_ref, bp_ref, dmq_ref, o_ref, *, n_bp: int):
+    """Non-uniform PWL tile kernel (compare-count decode fused via deltas).
+
+    bp_ref:  (n_bp, 1)    sorted breakpoints
+    dmq_ref: (n_bp+1, 2)  row 0 = (m_0, q_0); row i+1 = (dm_i, dq_i)
+    """
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.full_like(x, dmq_ref[0, 0])
+    q = jnp.full_like(x, dmq_ref[0, 1])
+    for i in range(n_bp):  # static unroll: n_bp <= 64
+        cmp = (x > bp_ref[i, 0]).astype(jnp.float32)
+        m = m + cmp * dmq_ref[i + 1, 0]
+        q = q + cmp * dmq_ref[i + 1, 1]
+    o_ref[...] = (m * x + q).astype(o_ref.dtype)
+
+
+def _pwl_uniform_kernel(x_ref, dmq_ref, o_ref, *, n_seg: int, lo: float, inv_h: float):
+    """Uniform PWL tile kernel: O(1) affine decode + delta fetch.
+
+    dmq_ref: (n_seg, 2) per-segment (m, q); segment 0/n_seg-1 are the boundary
+    segments.  idx = clip(floor((x-lo)*inv_h)+1, 0, n_seg-1).
+    """
+    x = x_ref[...].astype(jnp.float32)
+    idx = jnp.clip(
+        jnp.floor((x - lo) * inv_h).astype(jnp.int32) + 1, 0, n_seg - 1
+    ).astype(jnp.float32)
+    m = jnp.full_like(x, dmq_ref[0, 0])
+    q = jnp.full_like(x, dmq_ref[0, 1])
+    for i in range(n_seg - 1):  # fetch cost identical to non-uniform (no SRAM LUT)
+        step = (idx > i).astype(jnp.float32)
+        m = m + step * (dmq_ref[i + 1, 0] - dmq_ref[i, 0])
+        q = q + step * (dmq_ref[i + 1, 1] - dmq_ref[i, 1])
+    o_ref[...] = (m * x + q).astype(o_ref.dtype)
+
+
+def _block_specs(block, n_tab_rows_list):
+    bm, bn = block
+    in_specs = [pl.BlockSpec((bm, bn), lambda i, j: (i, j))]
+    for rows, cols in n_tab_rows_list:
+        # whole table in VMEM at every grid step (tiny, ld.bp()/ld.cf() analogue)
+        in_specs.append(pl.BlockSpec((rows, cols), lambda i, j: (0, 0)))
+    out_spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    return in_specs, out_spec
+
+
+def pwl_nonuniform_2d(
+    x2d: jax.Array,
+    bp: jax.Array,
+    dmq: jax.Array,
+    *,
+    block=DEFAULT_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    """pallas_call wrapper over a padded 2-D input (see ops.pwl_activation)."""
+    n_bp = bp.shape[0]
+    r, c = x2d.shape
+    bm, bn = min(block[0], r), min(block[1], c)
+    grid = (r // bm, c // bn)
+    in_specs, out_spec = _block_specs((bm, bn), [(n_bp, 1), (n_bp + 1, 2)])
+    return pl.pallas_call(
+        functools.partial(_pwl_nonuniform_kernel, n_bp=n_bp),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((r, c), x2d.dtype),
+        interpret=interpret,
+    )(x2d, bp.reshape(n_bp, 1).astype(jnp.float32), dmq.astype(jnp.float32))
+
+
+def pwl_uniform_2d(
+    x2d: jax.Array,
+    dmq: jax.Array,
+    lo: float,
+    hi: float,
+    *,
+    block=DEFAULT_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    n_seg = dmq.shape[0]
+    n_inner = n_seg - 2
+    inv_h = n_inner / (hi - lo)
+    r, c = x2d.shape
+    bm, bn = min(block[0], r), min(block[1], c)
+    grid = (r // bm, c // bn)
+    in_specs, out_spec = _block_specs((bm, bn), [(n_seg, 2)])
+    return pl.pallas_call(
+        functools.partial(
+            _pwl_uniform_kernel, n_seg=n_seg, lo=float(lo), inv_h=float(inv_h)
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((r, c), x2d.dtype),
+        interpret=interpret,
+    )(x2d, dmq.astype(jnp.float32))

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the PWL activation kernels.
+
+These are the semantic references every Pallas kernel is tested against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.pwl import PWLTable
+
+
+def pwl_activation_ref(x: jnp.ndarray, table: PWLTable) -> jnp.ndarray:
+    """Non-uniform PWL: compare-count decode + coefficient gather + MADD."""
+    cdtype = table.m.dtype
+    xf = x.astype(cdtype)
+    idx = jnp.sum(xf[..., None] > table.bp.astype(cdtype), axis=-1)
+    m = jnp.take(table.m, idx)
+    q = jnp.take(table.q, idx)
+    return (m * xf + q).astype(x.dtype)
+
+
+def pwl_activation_uniform_ref(
+    x: jnp.ndarray, lo: float, hi: float, m: jnp.ndarray, q: jnp.ndarray
+) -> jnp.ndarray:
+    """Uniform PWL baseline: O(1) affine address decode (prior-work scheme).
+
+    Segment i covers [lo + i*h, lo + (i+1)*h); 2 extra boundary segments.
+    m/q have n_seg entries where n_seg = n_inner + 2.
+    """
+    cdtype = m.dtype
+    xf = x.astype(cdtype)
+    n_inner = m.shape[0] - 2
+    h = (hi - lo) / n_inner
+    idx = jnp.clip(jnp.floor((xf - lo) / h).astype(jnp.int32) + 1, 0, n_inner + 1)
+    return (jnp.take(m, idx) * xf + jnp.take(q, idx)).astype(x.dtype)
+
+
+def pwl_softmax_ref(x: jnp.ndarray, table: PWLTable, axis: int = -1) -> jnp.ndarray:
+    """Softmax with PWL-approximated exp (paper Sec. V-B: exp(x - max))."""
+    xm = jnp.max(x, axis=axis, keepdims=True)
+    e = pwl_activation_ref(x - xm, table)
+    e = jnp.maximum(e, 0.0)  # PWL(exp) can dip epsilon-negative far left
+    return e / jnp.sum(e, axis=axis, keepdims=True)

@@ -1,0 +1,121 @@
+"""Production training launcher: config -> mesh -> sharded train loop with
+checkpoint/restart, preemption handling, and straggler monitoring.
+
+Usage (host-scale example; the same code path drives the pod-scale mesh):
+
+  PYTHONPATH=src python -m repro.launch.train --arch repro-100m --steps 200 \
+      --batch 8 --seq 512 --ckpt-dir /tmp/ckpt --act-impl pwl
+
+On a real fleet this process runs once per host (jax.distributed.initialize
+picks up the cluster env); here it drives however many devices the host has.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager, install_sigterm_save
+from repro.configs import get_config, get_reduced_config
+from repro.data.pipeline import DataConfig, IteratorState, PrefetchIterator, SyntheticLMData
+from repro.distributed.monitor import StepMonitor
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import build_train_step
+from repro.models import ShapeCell
+from repro.optim import adamw
+
+
+def train(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="repro-100m")
+    ap.add_argument("--reduced", action="store_true", help="reduced config (CI)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--act-impl", default="exact", choices=["exact", "pwl", "pwl_kernel"])
+    ap.add_argument("--act-breakpoints", type=int, default=32)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    getter = get_reduced_config if args.reduced else get_config
+    cfg = getter(args.arch, act_impl=args.act_impl, act_breakpoints=args.act_breakpoints)
+    mesh = make_host_mesh(model=args.model_parallel)
+    cell = ShapeCell("host", args.seq, args.batch, "train")
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps, warmup_steps=max(args.steps // 20, 5))
+
+    step_fn, in_sh, out_sh, structs, extra = build_train_step(
+        cfg, mesh, cell, opt_cfg=opt_cfg, microbatches=1
+    )
+    jstep = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh,
+                    donate_argnums=extra["donate_argnums"])
+
+    from repro.models import Model
+
+    model = Model(cfg)
+    data = SyntheticLMData(
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch)
+    )
+
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start_step = 0
+    state = None
+    it_state = None
+    if ckpt and ckpt.latest_step() is not None:
+        params = model.init(jax.random.PRNGKey(0))
+        proto = adamw.init_state(params)
+        state, extra_meta = ckpt.restore(like=proto)
+        start_step = int(extra_meta.get("step", 0))
+        it_state = IteratorState.from_dict(extra_meta["iterator"]) if "iterator" in extra_meta else None
+        print(f"[train] resumed from step {start_step}", flush=True)
+    if state is None:
+        params = model.init(jax.random.PRNGKey(0))
+        state = adamw.init_state(params)
+
+    it = PrefetchIterator(data, state=it_state)
+    monitor = StepMonitor()
+
+    def emergency_save():
+        if ckpt:
+            ckpt.save(start_step, state, extra={"step": start_step, "iterator": it.state.to_dict()})
+            print("[train] SIGTERM: checkpoint saved", flush=True)
+
+    install_sigterm_save(emergency_save)
+
+    losses = []
+    for step in range(start_step, args.steps):
+        batch = next(it)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        monitor.start_step()
+        state, metrics = jstep(state, batch)
+        loss = float(metrics["loss"])
+        monitor.end_step(step)
+        losses.append(loss)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(
+                f"[train] step={step} loss={loss:.4f} "
+                f"lr={float(metrics['lr']):.2e} gnorm={float(metrics['grad_norm']):.3f}",
+                flush=True,
+            )
+        if ckpt and step > 0 and step % args.ckpt_every == 0:
+            ckpt.save(step, state, extra={"step": step, "iterator": it.state.to_dict()})
+        if monitor.should_evict:
+            print("[train] persistent straggler: checkpoint + exit for reschedule", flush=True)
+            emergency_save()
+            return 17
+    if ckpt:
+        ckpt.save(args.steps, state, extra={"step": args.steps, "iterator": it.state.to_dict()})
+    it.close()
+    print(f"[train] done. first loss {losses[0]:.4f} -> last {losses[-1]:.4f}", flush=True)
+    return 0 if losses[-1] < losses[0] else 2
+
+
+if __name__ == "__main__":
+    sys.exit(train())

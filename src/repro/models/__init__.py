@@ -1,0 +1,14 @@
+from .common import ModelConfig, ParamDef, init_params, logical_specs, shape_structs
+from .model import Model, SHAPE_CELLS, ShapeCell, input_specs
+
+__all__ = [
+    "ModelConfig",
+    "ParamDef",
+    "Model",
+    "SHAPE_CELLS",
+    "ShapeCell",
+    "input_specs",
+    "init_params",
+    "logical_specs",
+    "shape_structs",
+]

@@ -1,0 +1,514 @@
+"""Shared model layers: norms, RoPE, flash-style attention, GLU MLPs.
+
+Every nonlinearity resolves through ``repro.core.registry`` so one config knob
+swaps exact <-> PWL (Flex-SFU) implementations across the whole zoo.
+
+Attention is a pure-JAX flash formulation (two-level lax.scan with online
+softmax in f32): peak memory is O(q_chunk * kv_chunk) per head instead of
+O(S^2), which is what makes the 32k-prefill and 500k-decode dry-run cells fit.
+Sliding-window layers dynamic-slice the KV to [q_start-window, q_end), making
+local attention O(S * window) compute instead of O(S^2).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import registry
+from repro.distributed.sharding import constrain
+
+from .common import ModelConfig
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(x.dtype)
+
+
+def nonparam_ln(x, eps=1e-5):
+    """OLMo's non-parametric LayerNorm (no scale/bias)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def apply_norm(cfg: ModelConfig, params, x):
+    if cfg.norm_type == "rmsnorm":
+        return rms_norm(x, params["scale"])
+    if cfg.norm_type == "layernorm":
+        return layer_norm(x, params["scale"], params["bias"])
+    if cfg.norm_type == "nonparam_ln":
+        return nonparam_ln(x)
+    raise ValueError(cfg.norm_type)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, dh), positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    sin = jnp.sin(angles)[..., None, :]  # (..., S, 1, half)
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int):
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d_model)
+    pe = jnp.zeros((seq_len, d_model))
+    pe = pe.at[:, 0::2].set(jnp.sin(angle)).at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# softmax exp resolution (paper Sec. V-B: PWL exp for softmax)
+
+
+def resolve_exp(cfg: ModelConfig) -> Callable:
+    if cfg.pwl_softmax and cfg.act_impl != "exact":
+        table = registry.get_table("exp", cfg.act_breakpoints)
+
+        def pwl_exp(x):
+            from repro.core.pwl import eval_coeff
+
+            return jnp.maximum(eval_coeff(x, table), 0.0)
+
+        return pwl_exp
+    return jnp.exp
+
+
+# ---------------------------------------------------------------------------
+# flash attention (pure JAX, chunked, online softmax)
+
+
+def _chunk_attn_block(q, k, v, mask, exp_fn, m_prev, l_prev, acc_prev, scale):
+    """One (q_chunk x kv_chunk) online-softmax update. All f32.
+
+    q: (B, G, Hkv, Sq, dh)   k/v: (B, Hkv, Skv, dh)   mask: (B, 1, 1, Sq, Skv)
+    """
+    s = jnp.einsum("bghqd,bhkd->bghqk", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    s = jnp.where(mask, s, -1e30)
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = exp_fn(s - m_new[..., None])
+    p = jnp.where(mask, p, 0.0)
+    corr = exp_fn(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    acc_new = acc_prev * corr[..., None] + jnp.einsum(
+        "bghqk,bhkd->bghqd", p, v.astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+    return m_new, l_new, acc_new
+
+
+def flash_attention(
+    q,  # (B, S, H, dh)
+    k,  # (B, T, Hkv, dh)
+    v,  # (B, T, Hkv, dh)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    exp_fn: Callable = jnp.exp,
+    q_chunk: int = 256,
+    kv_chunk: int = 2048,
+    kv_valid_len=None,  # None or (B,) — for ragged caches
+    unroll: bool = False,  # python-loop instead of lax.scan: exact FLOP
+    #                        accounting for the dry-run probes (cost_analysis
+    #                        counts scan bodies once) — see dryrun.probe_metrics
+    allow_causal_unroll: bool = True,  # Perf H2 kill-switch (baseline runs)
+):
+    """Chunked online-softmax attention.  Returns (B, S, H, dh).
+
+    window: sliding-window size; for windowed layers KV is dynamic-sliced to
+    the reachable band per q-chunk (O(S*window) instead of O(S^2)).
+    """
+    B, S, H, dh = q.shape
+    T = k.shape[1]
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(dh)
+    static_zero_off = (
+        allow_causal_unroll and isinstance(q_offset, int) and q_offset == 0
+    )
+    if causal and static_zero_off and S == T and kv_valid_len is None:
+        # size q chunks so the causal static unroll below stays <= 16 blocks
+        q_chunk = max(q_chunk, -(-S // 16))
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    n_q = -(-S // q_chunk)
+    pad_q = n_q * q_chunk - S
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    qf = q.astype(jnp.float32).reshape(B, n_q, q_chunk, Hkv, G, dh)
+    qf = qf.transpose(1, 0, 4, 3, 2, 5)  # (n_q, B, G, Hkv, q_chunk, dh)
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)  # (B, Hkv, T, dh)
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+
+    if window is not None and window < T:
+        # windowed: slice the reachable KV band per q chunk (static size)
+        band = window + q_chunk
+        band = min(band, T)
+
+        def q_step(_, qc_i):
+            qc, i = qc_i
+            q_start = i * q_chunk + q_offset
+            band_start = jnp.clip(q_start - window + 1, 0, T - band)
+            kb = jax.lax.dynamic_slice_in_dim(kf, band_start, band, axis=2)
+            vb = jax.lax.dynamic_slice_in_dim(vf, band_start, band, axis=2)
+            qpos = q_start + jnp.arange(q_chunk)
+            kpos = band_start + jnp.arange(band)
+            mask = kpos[None, :] <= qpos[:, None] if causal else jnp.ones(
+                (q_chunk, band), bool
+            )
+            mask &= (qpos[:, None] - kpos[None, :]) < window
+            if kv_valid_len is not None:
+                mask = mask[None] & (kpos[None, None, :] < kv_valid_len[:, None, None])
+                mask = mask[:, None, None]
+            else:
+                mask = mask[None, None, None]
+            m0 = jnp.full((B, G, Hkv, q_chunk), -1e30)
+            l0 = jnp.zeros((B, G, Hkv, q_chunk))
+            a0 = jnp.zeros((B, G, Hkv, q_chunk, dh))
+            m, l, acc = _chunk_attn_block(qc, kb, vb, mask, exp_fn, m0, l0, a0, scale)
+            return None, acc / jnp.maximum(l[..., None], 1e-30)
+
+        if unroll:
+            out = jnp.stack([q_step(None, (qf[i], i))[1] for i in range(n_q)])
+        else:
+            _, out = jax.lax.scan(q_step, None, (qf, jnp.arange(n_q)))
+    elif (
+        causal
+        and static_zero_off
+        and S == T
+        and kv_valid_len is None
+        and n_q <= 16
+        and S % q_chunk == 0
+    ):
+        # -- causal static unroll (Perf-H2, EXPERIMENTS.md Sec. Perf) --------
+        # the scan formulation computes scores for every (q, kv) block pair,
+        # including fully-masked future blocks: ~2x wasted attention FLOPs.
+        # Unrolling q chunks with a *static* kv prefix slice [0 : (i+1)*qc]
+        # halves the compute; the diagonal block keeps its triangular mask.
+        outs = []
+        for i in range(n_q):
+            qc = qf[i]  # (B, G, Hkv, q_chunk, dh)
+            L_i = (i + 1) * q_chunk
+            kb = kf[:, :, :L_i]
+            vb = vf[:, :, :L_i]
+            qpos = i * q_chunk + jnp.arange(q_chunk)
+            kpos = jnp.arange(L_i)
+            mask = (kpos[None, :] <= qpos[:, None])[None, None, None]
+            m0 = jnp.full((B, G, Hkv, q_chunk), -1e30)
+            l0 = jnp.zeros((B, G, Hkv, q_chunk))
+            a0 = jnp.zeros((B, G, Hkv, q_chunk, dh))
+            m, l, acc = _chunk_attn_block(qc, kb, vb, mask, exp_fn, m0, l0, a0, scale)
+            outs.append(acc / jnp.maximum(l[..., None], 1e-30))
+        out = jnp.stack(outs)
+    else:
+        n_kv = -(-T // kv_chunk)
+        pad_kv = n_kv * kv_chunk - T
+        if pad_kv:
+            kf = jnp.pad(kf, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+            vf = jnp.pad(vf, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        kf = kf.reshape(B, Hkv, n_kv, kv_chunk, dh).transpose(2, 0, 1, 3, 4)
+        vf = vf.reshape(B, Hkv, n_kv, kv_chunk, dh).transpose(2, 0, 1, 3, 4)
+
+        def q_step(_, qc_i):
+            qc, i = qc_i
+            q_start = i * q_chunk + q_offset
+            qpos = q_start + jnp.arange(q_chunk)
+
+            def kv_step(carry, kc_j):
+                kb, vb, j = kc_j
+                m_p, l_p, a_p = carry
+                kpos = j * kv_chunk + jnp.arange(kv_chunk)
+                mask = (
+                    kpos[None, :] <= qpos[:, None]
+                    if causal
+                    else jnp.ones((q_chunk, kv_chunk), bool)
+                )
+                mask &= (kpos < T)[None, :]
+                if kv_valid_len is not None:
+                    mask = mask[None] & (
+                        kpos[None, None, :] < kv_valid_len[:, None, None]
+                    )
+                    mask = mask[:, None, None]
+                else:
+                    mask = mask[None, None, None]
+                m, l, acc = _chunk_attn_block(
+                    qc, kb, vb, mask, exp_fn, m_p, l_p, a_p, scale
+                )
+                return (m, l, acc), None
+
+            m0 = jnp.full((B, G, Hkv, q_chunk), -1e30)
+            l0 = jnp.zeros((B, G, Hkv, q_chunk))
+            a0 = jnp.zeros((B, G, Hkv, q_chunk, dh))
+            if unroll:
+                carry = (m0, l0, a0)
+                for j in range(n_kv):
+                    carry, _ = kv_step(carry, (kf[j], vf[j], j))
+                m, l, acc = carry
+            else:
+                (m, l, acc), _ = jax.lax.scan(
+                    kv_step, (m0, l0, a0), (kf, vf, jnp.arange(n_kv))
+                )
+            return None, acc / jnp.maximum(l[..., None], 1e-30)
+
+        if unroll:
+            out = jnp.stack([q_step(None, (qf[i], i))[1] for i in range(n_q)])
+        else:
+            _, out = jax.lax.scan(q_step, None, (qf, jnp.arange(n_q)))
+
+    # out: (n_q, B, G, Hkv, q_chunk, dh) -> (B, S, H, dh)
+    out = out.transpose(1, 0, 4, 3, 2, 5).reshape(B, n_q * q_chunk, H, dh)
+    return out[:, :S].astype(q.dtype)
+
+
+def decode_attention(
+    q,        # (B, 1, H, dh)
+    k_cache,  # (B, T, Hkv, dh)
+    v_cache,  # (B, T, Hkv, dh)
+    valid,    # (B, T) bool
+    exp_fn: Callable = jnp.exp,
+):
+    """Single-position attention over a cache (dense, no chunking needed)."""
+    B, _, H, dh = q.shape
+    Hkv = k_cache.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(dh)
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, dh)
+    s = jnp.einsum(
+        "bhgd,bthd->bhgt", qf, k_cache.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ) * scale
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = exp_fn(s - m)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum(
+        "bhgt,bthd->bhgd", p / jnp.maximum(l, 1e-30),
+        v_cache.astype(jnp.float32), preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sliced-q sharded attention (Perf H1, EXPERIMENTS.md Sec. Perf)
+
+
+def _sliced_q_attention(cfg, q, k, v, *, causal, window, exp_fn, rules):
+    """Shard attention COMPUTE over the model axis when head counts don't
+    divide it: K/V stay replicated (they already are under our rules), each
+    model rank runs flash attention for its contiguous q stripe, and one
+    all-gather reassembles the sequence.  Per-rank attention FLOPs drop from
+    the full S x T (GSPMD's replicated fallback) to (S/tp) x T.
+
+    (A true ring/zigzag would also shard KV residency; at 4k-32k sequence the
+    replicated-KV variant is strictly cheaper in link traffic — one output
+    all-gather vs tp K/V rotations.)"""
+    import functools as _ft
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = rules.mesh
+    tp = dict(mesh.shape).get("model", 1)
+    B, S, H, dh = q.shape
+    S_loc = S // tp
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = 1
+    for a in batch_axes:
+        dp *= mesh.shape[a]
+    bspec = batch_axes if (batch_axes and B % dp == 0) else None
+
+    @_ft.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(bspec, None, None, None),) * 3,
+        out_specs=P(bspec, None, None, None),
+        check_rep=False,
+    )
+    def run(q_r, k_r, v_r):
+        r = jax.lax.axis_index("model")
+        q_loc = jax.lax.dynamic_slice_in_dim(q_r, r * S_loc, S_loc, axis=1)
+        out_loc = flash_attention(
+            q_loc, k_r, v_r, causal=causal, window=window,
+            q_offset=r * S_loc, exp_fn=exp_fn, unroll=cfg.unroll_scans,
+        )
+        return jax.lax.all_gather(out_loc, "model", axis=1, tiled=True)
+
+    return run(q, k, v)
+
+
+def _flash_or_sliced(cfg, q, k, v, *, causal, window, exp_fn):
+    """Attention dispatch.  Perf iterations H1 (sliced-q shard_map) and H1c
+    (attention-segment batch resharding) were both MEASURED AND REFUTED on
+    qwen2.5-32b train_4k — the gradient psums / GSPMD resharding they induce
+    cost more than the replicated attention compute they save (Sec. Perf).
+    The shipped configuration: plain flash with the H2 causal unroll; GSPMD
+    replicates attention across the model axis for non-divisible head counts.
+    """
+    return flash_attention(
+        q, k, v, causal=causal, window=window, exp_fn=exp_fn,
+        unroll=cfg.unroll_scans,
+        allow_causal_unroll=cfg.causal_unroll,
+    )
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+
+
+def mlp(cfg: ModelConfig, params, x):
+    """Dense FFN: swiglu / geglu / plain, activation via the PWL registry."""
+    act = registry.resolve_for(cfg, cfg.activation)
+    dtype = x.dtype
+    # Megatron-style sequence parallelism: inside the TP region the hidden is
+    # sharded on d_ff ONLY (seq replicated) — one all-gather in, one
+    # reduce-scatter out per layer.  Constraining seq@model here too would
+    # force an activation all-gather per gemm (measured: 6.4 GB/layer on
+    # qwen2.5-32b, see EXPERIMENTS.md Sec. Perf).
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        g = x @ params["w_gate"].astype(dtype)
+        u = x @ params["w_up"].astype(dtype)
+        g = constrain(g, "batch", None, "mlp")
+        u = constrain(u, "batch", None, "mlp")
+        h = act(g) * u
+        y = h @ params["w_down"].astype(dtype)
+    else:
+        h = x @ params["w_in"].astype(dtype)
+        if "b_in" in params:
+            h = h + params["b_in"].astype(dtype)
+        h = constrain(h, "batch", None, "mlp")
+        h = act(h)
+        y = h @ params["w_down"].astype(dtype)
+        if "b_down" in params:
+            y = y + params["b_down"].astype(dtype)
+    return constrain(y, "batch", "act_seq", "act_embed")
+
+
+# ---------------------------------------------------------------------------
+# attention layer (projections + flash / decode)
+
+
+def attention_layer(
+    cfg: ModelConfig,
+    params,
+    x,
+    *,
+    kind: str = "attn",        # attn | attn_local | attn_global
+    positions=None,            # (B, S) absolute positions
+    cache=None,                # dict(k, v, ...) for decode, or None
+    cache_pos=None,            # scalar int — write offset for decode
+    cross_kv=None,             # (k, v) for cross-attention (whisper)
+    use_rope: bool = True,
+):
+    """Returns (y, new_cache).  Train/prefill when cache is None or a fresh
+    buffer being filled; decode when x has seq_len 1 and cache is given."""
+    B, S, D = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    dtype = x.dtype
+    exp_fn = resolve_exp(cfg)
+    window = cfg.sliding_window if kind == "attn_local" else None
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(dtype)
+    if cross_kv is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dtype))
+        v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dtype))
+        if "bk" in params:
+            k = k + params["bk"].astype(dtype)
+            v = v + params["bv"].astype(dtype)
+    else:
+        k, v = cross_kv
+
+    if positions is None:
+        positions = jnp.arange(S)[None, :] + (0 if cache_pos is None else cache_pos)
+        positions = jnp.broadcast_to(positions, (B, S))
+    theta = cfg.rope_theta
+    if use_rope and cross_kv is None:
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+
+    q = constrain(q, "batch", "act_seq", "act_heads", None)
+
+    if cache is not None and cross_kv is None:
+        # cache layout: full-length buffer for global layers; ring buffer of
+        # size `window` for local layers (slot = pos % window).
+        T = cache["k"].shape[1]
+        ring = window is not None and T == window
+        kc, vc = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+        pos0 = cache_pos if cache_pos is not None else 0
+        if S == 1:
+            slot = (pos0 % T) if ring else pos0
+            k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], kc, slot, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], vc, slot, axis=1)
+        elif ring and S >= T:
+            # prefill overflowing a ring: keep last T tokens at their modular
+            # slots (token at abs pos p lands at slot p % T  <=>  roll by S%T)
+            k_cache = jnp.roll(kc[:, S - T :], S % T, axis=1)
+            v_cache = jnp.roll(vc[:, S - T :], S % T, axis=1)
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], kc, pos0, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], vc, pos0, axis=1)
+        new_cache = {"k": k_cache, "v": v_cache}
+        if S == 1:
+            # decode: attend over cache with validity mask
+            t = jnp.arange(T)
+            if ring:
+                valid = (t[None, :] <= pos0) | (pos0 >= T)  # all slots once wrapped
+            else:
+                valid = t[None, :] <= pos0
+            valid = jnp.broadcast_to(valid, (B, T))
+            k_cache = constrain(k_cache, "batch", "cache_seq", "cache_kv", None)
+            v_cache = constrain(v_cache, "batch", "cache_seq", "cache_kv", None)
+            y = decode_attention(q, k_cache, v_cache, valid, exp_fn)
+        else:
+            # prefill: full causal attention over the (fresh) prefix
+            y = _flash_or_sliced(
+                cfg, q, k, v, causal=True, window=window, exp_fn=exp_fn
+            )
+    else:
+        new_cache = cache
+        if cross_kv is not None:
+            y = flash_attention(q, k, v, causal=False, exp_fn=exp_fn,
+                                unroll=cfg.unroll_scans)
+        else:
+            y = _flash_or_sliced(
+                cfg, q, k, v, causal=True, window=window, exp_fn=exp_fn
+            )
+
+    y = constrain(y, "batch", "act_seq", "act_heads", None)
+    out = jnp.einsum("bshk,hkd->bsd", y, params["wo"].astype(dtype))
+    return constrain(out, "batch", "act_seq", "act_embed"), new_cache

@@ -1,0 +1,161 @@
+"""Mixture-of-Experts FFN: token-choice top-k routing with capacity buckets.
+
+Dispatch is the cumsum-of-one-hot scheme (no sort, no double-batched gather —
+see repro/_jax_compat.py for why that matters here): every (token, choice)
+pair gets a position within its expert's capacity bucket; overflow tokens are
+dropped (residual passes through).
+
+Two execution paths:
+
+* **shard_map expert-parallel** (meshes with a >1 "model" axis): dispatch is
+  LOCAL per data shard, then one explicit ``all_to_all`` over the model axis
+  routes expert buckets to their owning rank, expert FFNs run on local expert
+  weights, and a second ``all_to_all`` brings outputs home.  Per-layer link
+  traffic is O(tokens x d_model) — the token volume itself.
+
+* **single-shard fallback** (tests, host meshes): plain local dispatch.
+
+The shard_map path exists because GSPMD's scatter partitioner cannot prove
+our dispatch local: it materializes each (E, C, D) buffer with a full
+all-reduce — measured 25-40 GiB/layer/device on olmoe-1b-7b train_4k, 343 s
+of ICI time per step (EXPERIMENTS.md Sec. Perf, hypothesis H-MoE).
+
+Aux loss: Switch-style load-balancing loss, returned to the train step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import registry
+from repro.distributed.sharding import _ACTIVE, constrain
+
+from .common import ModelConfig
+
+
+def moe_layer(cfg: ModelConfig, params, x):
+    """x: (B, S, D) -> (y: (B, S, D), aux_loss: scalar f32).
+
+    Chooses the shard_map expert-parallel path when an active Rules context
+    provides a mesh with a non-trivial "model" axis and E divides it."""
+    rules = _ACTIVE.get()
+    if rules is not None and rules.mesh is not None:
+        tp = dict(rules.mesh.shape).get("model", 1)
+        if tp > 1 and cfg.n_experts % tp == 0:
+            return _moe_layer_shardmap(cfg, params, x, rules)
+    return _moe_layer_local(cfg, params, x)
+
+
+def _moe_layer_shardmap(cfg: ModelConfig, params, x, rules):
+    """Expert-parallel MoE: local dispatch + explicit all_to_all (Perf H-MoE)."""
+    mesh = rules.mesh
+    axes = mesh.axis_names
+    batch_axes = tuple(a for a in ("pod", "data") if a in axes)
+    B = x.shape[0]
+    dp = 1
+    for a in batch_axes:
+        dp *= mesh.shape[a]
+    x_bspec = batch_axes if (batch_axes and B % dp == 0) else None
+
+    pspecs = {
+        "router": P(None, None),
+        "w_gate": P("model", None, None),
+        "w_up": P("model", None, None),
+        "w_down": P("model", None, None),
+    }
+
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(x_bspec, None, None), pspecs),
+        out_specs=(P(x_bspec, None, None), P()),
+        check_rep=False,
+    )
+    def run(x_loc, p_loc):
+        y, aux = _moe_local_dispatch(
+            cfg, p_loc, x_loc, ep_axis="model", ep_size=dict(mesh.shape)["model"]
+        )
+        for a in batch_axes:
+            aux = jax.lax.pmean(aux, a)
+        return y, aux
+
+    return run(x, {k: params[k] for k in pspecs})
+
+
+def _moe_layer_local(cfg: ModelConfig, params, x):
+    y, aux = _moe_local_dispatch(cfg, params, x, ep_axis=None)
+    return y, aux
+
+
+def _moe_local_dispatch(cfg: ModelConfig, params, x, ep_axis, ep_size: int = 1):
+    """Token-choice dispatch on the LOCAL token shard.  With ep_axis set, the
+    expert dim is distributed over that mesh axis via all_to_all."""
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.n_active_experts
+    dtype = x.dtype
+    xt = x.reshape(T, D)
+    # --- routing (f32 for numerics) ---
+    logits = (xt.astype(jnp.float32)) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    top_w, top_e = jax.lax.top_k(probs, K)   # (T, K)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # --- capacity & positions (cumsum-of-one-hot), LOCAL to this shard ---
+    capacity = max(1, int(cfg.capacity_factor * T * K / E))
+    flat_e = top_e.reshape(-1)                       # (T*K,)
+    oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (T*K, E)
+    pos_all = jnp.cumsum(oh, axis=0) - 1             # position per expert
+    pos = jnp.take_along_axis(pos_all, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < capacity
+    flat_t = jnp.repeat(jnp.arange(T), K)
+    flat_w = top_w.reshape(-1) * keep.astype(jnp.float32)
+
+    # --- dispatch: scatter tokens into LOCAL (E, C, D) expert buffers ---
+    safe_pos = jnp.where(keep, pos, capacity - 1)
+    # Perf H-MoE-2 (EXPERIMENTS.md): tokens are REPLICATED over the model
+    # (EP) axis inside shard_map, so no token movement is needed at all —
+    # each rank builds capacity buckets only for ITS OWN expert slice and a
+    # single psum of the (T, D) partial outputs combines across ranks.
+    # Link traffic ~2 x T x D bytes/layer vs K x cf x T x D for the bucket
+    # all-to-all of H-MoE-1 (measured ladder in Sec. Perf).
+    if ep_axis is not None:
+        E_loc = E // ep_size  # static: ep_size is the mesh "model" extent
+        rank = jax.lax.axis_index(ep_axis)
+        mine = (flat_e // E_loc) == rank
+        local_e = jnp.where(mine, flat_e - rank * E_loc, 0)
+        sel = mine & keep
+    else:
+        E_loc = E
+        local_e = flat_e
+        sel = keep
+    contrib = jnp.where(sel[:, None], xt[flat_t], 0).astype(dtype)
+    buf = jnp.zeros((E_loc, capacity, D), dtype)
+    buf = buf.at[local_e, safe_pos].add(contrib, mode="drop")
+
+    # --- expert FFN on local experts ---
+    act = registry.resolve_for(cfg, cfg.activation)
+    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(dtype))
+    h = act(g) * u
+    out = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(dtype))
+
+    # --- combine: partial outputs for local tokens, psum across EP ranks ---
+    w_sel = jnp.where(sel, flat_w, 0.0)
+    picked = out[local_e, safe_pos] * w_sel[:, None].astype(dtype)  # (T*K, D)
+    y = jnp.zeros((T, D), dtype).at[flat_t].add(picked)
+    if ep_axis is not None:
+        y = jax.lax.psum(y, ep_axis)
+
+    # --- switch load-balancing loss (local stats; caller pmean's) ---
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), axis=0
+    )
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+
+    return y.reshape(B, S, D), aux

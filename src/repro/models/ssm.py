@@ -1,0 +1,206 @@
+"""Mamba2 (state-space duality) block — chunked SSD for train/prefill, exact
+single-step recurrence for decode.
+
+The SSD formulation computes, per head h with state size N and head dim P:
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t        (N-dim state per (h, p))
+    y_t = C_t . h_t + D x_t
+
+Training runs the chunked block-matrix algorithm (intra-chunk "attention-like"
+quadratic term + inter-chunk state recurrence), which maps onto the MXU as
+dense matmuls — this is the TPU-friendly form (no sequential scan over L).
+
+The paper's technique applies here too: the block is activation-rich — SiLU on
+the conv branch and gate, softplus on dt — all resolved through the PWL
+registry (DESIGN.md Sec. 5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import registry
+from repro.distributed.sharding import constrain
+
+from .common import ModelConfig
+
+from .layers import rms_norm
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    d_state = cfg.ssm_state
+    conv_channels = d_inner + 2 * d_state  # n_groups = 1
+    d_in_proj = 2 * d_inner + 2 * d_state + n_heads
+    return d_inner, n_heads, d_state, conv_channels, d_in_proj
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d via kernel-size shifts. x: (B, L, C), w: (K, C)."""
+    K = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        shift = K - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xi * w[i]
+    return out + b
+
+
+def _segsum_exp(a):
+    """exp(segsum): a (..., s) -> lower-tri (..., s, s) with
+    L[i,j] = exp(sum_{k=j+1..i} a_k) for i>=j, else 0."""
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]  # (..., i, j)
+    s = a.shape[-1]
+    tri = jnp.tril(jnp.ones((s, s), bool))
+    return jnp.where(tri, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(xdt, a, Bmat, Cmat, chunk, h_init=None):
+    """Chunked SSD. All f32.
+
+    xdt:  (b, l, h, p)   dt-scaled inputs
+    a:    (b, l, h)      dt * A  (negative)
+    Bmat: (b, l, n)      input projections (single group, broadcast over h)
+    Cmat: (b, l, n)      output projections
+    Returns (y: (b, l, h, p), h_last: (b, h, p, n)).
+    """
+    b, l, h, p = xdt.shape
+    n = Bmat.shape[-1]
+    if l % chunk:  # pad to a chunk multiple: a=0 (decay 1) + B=0 (no update)
+        pad = chunk - l % chunk
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+        y, h_last = ssd_chunked(xdt, a, Bmat, Cmat, chunk, h_init)
+        return y[:, :l], h_last
+    nc = l // chunk
+    xdt = xdt.reshape(b, nc, chunk, h, p)
+    a = a.reshape(b, nc, chunk, h)
+    Bc = Bmat.reshape(b, nc, chunk, n)
+    Cc = Cmat.reshape(b, nc, chunk, n)
+
+    a_cum = jnp.cumsum(a, axis=2)                      # (b, z, s, h)
+    L = _segsum_exp(a.transpose(0, 1, 3, 2))           # (b, z, h, s, s)
+
+    # intra-chunk (diagonal blocks): quadratic attention-like term
+    scores = jnp.einsum("bzcn,bzsn->bzcs", Cc, Bc)     # (b, z, c, s)
+    y_diag = jnp.einsum(
+        "bzcs,bzhcs,bzshp->bzchp", scores, L, xdt, preferred_element_type=jnp.float32
+    )
+
+    # chunk state contributions: decay from position s to chunk end
+    decay_out = jnp.exp(a_cum[:, :, -1:, :] - a_cum)   # (b, z, s, h)
+    states = jnp.einsum(
+        "bzsn,bzsh,bzshp->bzhpn", Bc, decay_out, xdt,
+        preferred_element_type=jnp.float32,
+    )
+
+    # inter-chunk recurrence over z (sequential scan over nc chunks)
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])          # (b, z, h)
+    if h_init is None:
+        h_init = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(hprev, zs):
+        st, dec = zs  # (b,h,p,n), (b,h)
+        hnew = hprev * dec[:, :, None, None] + st
+        return hnew, hprev
+
+    h_last, h_prevs = jax.lax.scan(
+        step,
+        h_init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)         # (b, z, h, p, n)
+
+    # inter-chunk output: decay from chunk start to position c
+    decay_in = jnp.exp(a_cum)                          # (b, z, c, h)
+    y_off = jnp.einsum(
+        "bzcn,bzhpn,bzch->bzchp", Cc, h_prevs, decay_in,
+        preferred_element_type=jnp.float32,
+    )
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, h_last
+
+
+def mamba2_layer(cfg: ModelConfig, params, x, cache=None):
+    """Mamba2 block.  x: (B, L, D).  Returns (y, new_cache).
+
+    cache (decode): {"conv": (B, K-1, C), "ssm": (B, H, P, N)} — exact
+    single-step recurrence when L == 1 and cache is not None.
+    """
+    B, L, D = x.shape
+    d_inner, n_heads, d_state, conv_ch, _ = ssm_dims(cfg)
+    P = cfg.ssm_head_dim
+    dtype = x.dtype
+    silu = registry.resolve_for(cfg, "silu", site="ssm")
+    softplus = registry.resolve_for(cfg, "softplus", site="ssm")
+
+    z = x @ params["in_z"].astype(dtype)               # (B, L, d_inner)
+    x_in = x @ params["in_x"].astype(dtype)            # (B, L, d_inner)
+    bc_in = x @ params["in_bc"].astype(dtype)          # (B, L, 2*N)
+    dt_raw = x @ params["in_dt"].astype(dtype)         # (B, L, H)
+    z = constrain(z, "batch", None, "ssm_inner")
+    xBC = jnp.concatenate([x_in, bc_in], axis=-1)      # conv runs over x|B|C
+
+    conv_w = params["conv_w"].astype(dtype)            # (K, C)
+    conv_b = params["conv_b"].astype(dtype)
+    K = conv_w.shape[0]
+
+    decode = cache is not None and L == 1
+    if decode:
+        # conv over [cache_window, current] — exact causal conv at one step
+        win = jnp.concatenate([cache["conv"].astype(dtype), xBC], axis=1)  # (B,K,C)
+        conv_out = jnp.einsum("bkc,kc->bc", win, conv_w) + conv_b
+        conv_out = conv_out[:, None, :]
+        new_conv = win[:, 1:]
+    else:
+        conv_out = _causal_conv(xBC, conv_w, conv_b)
+        new_conv = None
+        if cache is not None:  # prefill: stash the tail for decode
+            tail = jnp.pad(xBC, ((0, 0), (max(0, K - 1 - L), 0), (0, 0)))
+            new_conv = tail[:, -(K - 1) :]
+
+    conv_out = silu(conv_out)
+    x_ssm = conv_out[..., :d_inner]
+    Bmat = conv_out[..., d_inner : d_inner + d_state]
+    Cmat = conv_out[..., d_inner + d_state :]
+
+    dt = softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (H,)
+    xh = x_ssm.astype(jnp.float32).reshape(B, L, n_heads, P)
+    xdt = xh * dt[..., None]
+    a = dt * A  # (B, L, H)
+
+    if decode:
+        h_prev = cache["ssm"].astype(jnp.float32)      # (B, H, P, N)
+        dec = jnp.exp(a[:, 0])                          # (B, H)
+        upd = jnp.einsum("bn,bhp->bhpn", Bmat[:, 0].astype(jnp.float32), xdt[:, 0])
+        h_new = h_prev * dec[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cmat[:, 0].astype(jnp.float32), h_new)
+        y = y[:, None]                                  # (B, 1, H, P)
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype), "ssm": h_new.astype(cache["ssm"].dtype)}
+    else:
+        y, h_last = ssd_chunked(
+            xdt, a, Bmat.astype(jnp.float32), Cmat.astype(jnp.float32),
+            chunk=min(cfg.ssm_chunk, L), h_init=None,
+        )
+        y = y.reshape(B, L, n_heads, P)
+        new_cache = None
+        if cache is not None:
+            new_cache = {
+                "conv": new_conv.astype(cache["conv"].dtype),
+                "ssm": h_last.astype(cache["ssm"].dtype),
+            }
+
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh[:, :L]
+    y = y.reshape(B, y.shape[1], d_inner).astype(dtype)
+    y = constrain(y, "batch", None, "ssm_inner")
+
+    # gated RMSNorm then out projection
+    y = rms_norm(y * silu(z), params["norm_scale"])
+    out = y @ params["out_proj"].astype(dtype)
+    return constrain(out, "batch", None, "act_embed"), new_cache

@@ -1,0 +1,98 @@
+"""AdamW (pure JAX, pytree-native) + schedules + global-norm clipping.
+
+State layout mirrors the params tree (mu/nu per leaf, f32 master), so the
+sharding specs derived for params apply verbatim to the optimizer state —
+FSDP shards optimizer state for free (ZeRO-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    schedule: str = "cosine"  # cosine | linear | constant
+
+
+def make_schedule(cfg: AdamWConfig) -> Callable:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        if cfg.schedule == "constant":
+            decay = 1.0
+        else:
+            t = jnp.clip(
+                (step - cfg.warmup_steps)
+                / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                0.0,
+                1.0,
+            )
+            if cfg.schedule == "cosine":
+                decay = 0.5 * (1 + jnp.cos(jnp.pi * t))
+            else:
+                decay = 1.0 - t
+        return cfg.lr * warm * decay
+
+    return sched
+
+
+def init_state(params) -> dict:
+    zeros = lambda t: jax.tree_util.tree_map(jnp.zeros_like, t)
+    return {
+        "params": params,
+        "mu": zeros(params),
+        "nu": zeros(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+
+
+def apply_updates(state: dict, grads, cfg: AdamWConfig) -> tuple[dict, dict]:
+    """One AdamW step.  Returns (new_state, metrics)."""
+    step = state["step"] + 1
+    sched = make_schedule(cfg)
+    lr = sched(step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        u = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree_util.tree_flatten(state["params"])
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_mu = jax.tree_util.tree_leaves(state["mu"])
+    flat_nu = jax.tree_util.tree_leaves(state["nu"])
+    new = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_state = {
+        "params": jax.tree_util.tree_unflatten(tdef, [x[0] for x in new]),
+        "mu": jax.tree_util.tree_unflatten(tdef, [x[1] for x in new]),
+        "nu": jax.tree_util.tree_unflatten(tdef, [x[2] for x in new]),
+        "step": step,
+    }
+    return new_state, {"lr": lr, "grad_norm": gnorm}

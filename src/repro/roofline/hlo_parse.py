@@ -1,0 +1,78 @@
+"""Extract collective-traffic bytes from compiled/lowered HLO text.
+
+``cost_analysis()`` has no collective accounting, so we parse the (stable)HLO
+and sum operand sizes of every collective op, bucketed by op kind.  Operand
+shapes are parsed from the op result/operand type annotations.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "i64": 8, "i32": 4, "i16": 2, "i8": 1, "i1": 1,
+}
+
+# HLO style:  f32[128,1024]{1,0}            (inside all-gather(...) lines)
+_HLO_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * b
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output sizes of collective ops, by kind.  Returns
+    {kind: bytes, ..., "total": bytes, "count": n_ops}."""
+    out: dict = defaultdict(int)
+    count = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match e.g.:  %ag = f32[512,1024]{1,0} all-gather(%x), ...
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", s)
+        if not m:
+            continue
+        result_types, opname = m.group(1), m.group(2)
+        kind = None
+        for c in COLLECTIVE_OPS:
+            if opname == c or opname.startswith(c + "-"):
+                kind = c
+                break
+        if kind is None:
+            continue
+        # fusion-wrapped collectives keep their name; result may be a tuple
+        nbytes = 0
+        for dtype, dims in _HLO_SHAPE.findall(result_types):
+            nbytes += _shape_bytes(dtype, dims)
+        out[kind] += nbytes
+        count += 1
+    out["total"] = sum(v for k, v in out.items() if k in COLLECTIVE_OPS)
+    out["count"] = count
+    return dict(out)
+
+
+def op_histogram(hlo_text: str, ops=("dot", "convolution", "custom-call")) -> dict:
+    hist: dict = defaultdict(int)
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*.+?\s+([\w\-]+)\(", s)
+        if m and m.group(1) in ops:
+            hist[m.group(1)] += 1
+    return dict(hist)

@@ -1,0 +1,47 @@
+"""Validate the fit against the paper's own numbers (Table II / Fig 5).
+
+Full sweep lives in benchmarks/bench_table2_sota.py; here we pin the two
+rows that exactly calibrate our optimizer against the paper (sq-AAE metric,
+see EXPERIMENTS.md discussion) plus the Fig 5 scaling claim, at CI-friendly
+fit budgets.
+"""
+import jax.numpy as jnp
+import pytest
+
+import repro  # noqa: F401
+from repro.core import fit, functions as F, registry
+
+
+def sq_aae(table, spec, lo, hi, n=16384):
+    x = jnp.linspace(lo, hi, n)
+    return float(jnp.mean(jnp.abs(table(x) - spec.fn(x)))) ** 2
+
+
+@pytest.mark.slow
+def test_table2_tanh_row():
+    """Paper Table II: tanh [-8,8] 16 BP -> 4.27e-7 (we must be within 1.5x)."""
+    cfg = fit.FitConfig(max_steps=3000, max_rounds=6)
+    r = fit.fit("tanh", 16, -8.0, 8.0, cfg)
+    assert sq_aae(r.table, F.get("tanh"), -8, 8) < 4.27e-7 * 1.5
+
+
+def test_fig5_scaling_from_artifacts():
+    """Fig 5: MSE improves ~15.9x per breakpoint doubling (we accept >=6x
+    per doubling on the shipped artifacts, averaged over functions)."""
+    import numpy as np
+
+    ratios = []
+    for name in ["gelu", "silu", "sigmoid", "tanh", "exp"]:
+        spec = F.get(name)
+        lo, hi = spec.default_range
+        prev = None
+        for n in [8, 16, 32, 64]:
+            t = registry.get_table(name, n)
+            from repro.core import pwl
+
+            cur = pwl.mse(t, spec, lo, hi)
+            if prev is not None:
+                ratios.append(prev / cur)
+            prev = cur
+    gmean = float(np.exp(np.mean(np.log(ratios))))
+    assert gmean >= 6.0, gmean

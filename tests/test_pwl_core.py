@@ -1,0 +1,145 @@
+"""Unit + property tests for the PWL core: representation, eval, fit, quantize."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro  # noqa: F401  (compat shim)
+from repro.core import fit, functions as F, pwl, quantize, registry
+
+
+class TestPWLTable:
+    def test_params_to_coeffs_roundtrip(self):
+        """Coefficient form must agree with interpolation form everywhere."""
+        spec = F.get("tanh")
+        p = jnp.asarray([-3.0, -1.0, -0.25, 0.5, 2.0])
+        v = spec.fn(p)
+        m_l, m_r = 0.0, 0.0
+        v = v.at[0].set(m_l * p[0] - 1.0).at[-1].set(m_r * p[-1] + 1.0)
+        table = pwl.params_to_coeffs(p, v, m_l, m_r, name="tanh")
+        x = jnp.linspace(-6, 6, 4001)
+        y_interp = pwl.eval_interp(x, p, v, m_l, m_r)
+        y_coeff = pwl.eval_coeff(x, table)
+        np.testing.assert_allclose(y_interp, y_coeff, rtol=1e-5, atol=1e-6)
+
+    def test_eval_continuity_at_breakpoints(self):
+        """f̂ must be continuous (steady) at every breakpoint — paper Sec. IV."""
+        table = registry.get_table("gelu", 32)
+        eps = 1e-4
+        left = pwl.eval_coeff(table.bp - eps, table)
+        right = pwl.eval_coeff(table.bp + eps, table)
+        np.testing.assert_allclose(left, right, atol=1e-3)
+
+    def test_boundary_asymptotes(self):
+        """Far outside the range the PWL must ride the asymptote (Sec. IV)."""
+        for name in ["gelu", "silu", "tanh", "sigmoid"]:
+            spec = F.get(name)
+            table = registry.get_table(name, 32)
+            x = jnp.asarray([-100.0, 100.0])
+            y = pwl.eval_coeff(x, table)
+            expected = jnp.asarray(
+                [spec.m_left * -100.0 + spec.c_left, spec.m_right * 100.0 + spec.c_right]
+            )
+            np.testing.assert_allclose(y, expected, rtol=1e-4, atol=1e-3)
+
+    @given(
+        st.lists(st.floats(-8, 8, allow_nan=False), min_size=3, max_size=12, unique=True)
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_eval_piecewise_linear_property(self, pts):
+        """Property: f̂ restricted to any segment is exactly affine."""
+        p = jnp.sort(jnp.asarray(pts, jnp.float32))
+        v = jnp.asarray(np.random.RandomState(0).randn(len(pts)), jnp.float32)
+        table = pwl.params_to_coeffs(p, v, 0.3, -0.7)
+        # sample strictly inside a middle segment; check second difference == 0
+        lo, hi = float(p[0]), float(p[-1])
+        if hi - lo < 1e-3:
+            return
+        x = jnp.linspace(lo + 1e-4, hi - 1e-4, 997)
+        y = pwl.eval_coeff(x, table)
+        idx = jnp.sum(x[:, None] > table.bp, axis=-1)
+        same_seg = (idx[2:] == idx[:-2]) & (idx[1:-1] == idx[:-2])
+        d2 = y[2:] - 2 * y[1:-1] + y[:-2]
+        # tolerance is scale-aware: narrow segments + random values can have
+        # steep slopes, and the second difference cancels catastrophically
+        tol = 1e-4 * max(1.0, float(jnp.max(jnp.abs(y))) * 32)
+        assert float(jnp.max(jnp.abs(jnp.where(same_seg, d2, 0.0)))) < tol
+
+
+class TestFit:
+    def test_fit_beats_uniform_gelu_fig2(self):
+        """Paper Fig 2: non-uniform >= ~7x better MSE than uniform (5 BP, [-2,2])."""
+        cfg = fit.FitConfig(max_steps=1200, max_rounds=2)
+        r = fit.fit("gelu", 5, -2.0, 2.0, cfg)
+        uni = pwl.make_uniform_table(F.get("gelu"), 5, -2.0, 2.0)
+        mse_uni = pwl.mse(uni, F.get("gelu"), -2.0, 2.0)
+        assert mse_uni / r.mse >= 7.0, (mse_uni, r.mse)
+
+    def test_fit_monotone_breakpoints(self):
+        r = fit.fit("silu", 8, cfg=fit.FitConfig(max_steps=600, max_rounds=1))
+        bp = np.asarray(r.table.bp)
+        assert np.all(np.diff(bp) > 0)
+
+    def test_curvature_init_quality(self):
+        """Beyond-paper curvature init should land near fitted quality pre-Adam."""
+        spec = F.get("gelu")
+        p = fit.curvature_init(spec, 16, -8.0, 8.0)
+        v = spec.fn(p)
+        table = pwl.params_to_coeffs(p, v, spec.m_left, spec.m_right)
+        mse_curv = pwl.mse(table, spec, -8.0, 8.0)
+        uni = pwl.make_uniform_table(spec, 16)
+        mse_uni = pwl.mse(uni, spec, -8.0, 8.0)
+        assert mse_curv < mse_uni / 3  # big win before any optimization
+
+
+class TestRegistryTables:
+    @pytest.mark.parametrize("name", ["gelu", "silu", "sigmoid", "tanh", "exp"])
+    @pytest.mark.parametrize("n_bp", [16, 32])
+    def test_artifact_quality(self, name, n_bp):
+        """Fitted artifacts must beat the uniform baseline on their range."""
+        spec = F.get(name)
+        lo, hi = spec.default_range
+        table = registry.get_table(name, n_bp)
+        uni = pwl.make_uniform_table(spec, n_bp)
+        assert pwl.mse(table, spec, lo, hi) < pwl.mse(uni, spec, lo, hi)
+
+    def test_fig5_ulp_claim(self):
+        """Paper Fig 5: >16 breakpoints -> MSE below 1 fp16 ULP at base 1."""
+        ulp_fp16 = 2.0**-10
+        for name in ["gelu", "silu", "sigmoid", "tanh", "exp"]:
+            spec = F.get(name)
+            lo, hi = spec.default_range
+            table = registry.get_table(name, 32)
+            assert pwl.mse(table, spec, lo, hi) < ulp_fp16
+
+    def test_resolve_modes(self):
+        x = jnp.linspace(-4, 4, 512)
+        exact = registry.resolve("exact", "gelu")(x)
+        approx = registry.resolve("pwl", "gelu", 32)(x)
+        kernel = registry.resolve("pwl_kernel", "gelu", 32)(x)
+        assert float(jnp.max(jnp.abs(exact - approx))) < 5e-3
+        np.testing.assert_allclose(approx, kernel, rtol=1e-5, atol=1e-6)
+
+
+class TestQuantize:
+    @pytest.mark.parametrize("bits,tol", [(8, 0.15), (16, 1e-3), (32, 1e-5)])
+    def test_fixed_point_error_bounded(self, bits, tol):
+        table = registry.get_table("gelu", 32)
+        qt = quantize.quantize_table(table, bits, (-8.0, 8.0))
+        x = jnp.linspace(-8, 8, 4097)
+        y_fp = pwl.eval_coeff(x, table)
+        y_q = quantize.eval_fixed_point(x, qt)
+        assert float(jnp.max(jnp.abs(y_fp - y_q))) < tol
+
+    def test_decode_consistency(self):
+        """Integer compare decode must pick the same segment as float decode
+        (up to input-quantization ties)."""
+        table = registry.get_table("tanh", 16)
+        qt = quantize.quantize_table(table, 16, (-8.0, 8.0))
+        x = jnp.linspace(-7.9, 7.9, 1001)
+        idx_f = jnp.sum(x[:, None] > table.bp, axis=-1)
+        x_q = jnp.round(x / qt.s_x)
+        idx_q = jnp.sum(x_q[:, None] > qt.bp_q, axis=-1)
+        # allow off-by-one only where x quantizes across a breakpoint
+        assert float(jnp.mean(jnp.abs(idx_f - idx_q) > 1)) == 0.0
