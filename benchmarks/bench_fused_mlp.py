@@ -1,0 +1,100 @@
+"""Fused-vs-unfused MLP latency: exact / pwl / pwl_kernel / pwl_fused.
+
+The end-to-end claim behind the fused subsystem (ISSUE 1, mirroring the
+paper's Sec. V speedups): evaluating the PWL activation as an epilogue of
+the gemm that produced it removes one full read+write of the (tokens, d_ff)
+activations.  This benchmark times one GLU MLP block
+
+    y = (act(x @ Wg) * (x @ Wu)) @ Wd
+
+under the four act_impl modes on the current backend.  Emits CSV rows
+``name,us_per_call,derived`` via benchmarks/common.py.
+
+    PYTHONPATH=src python benchmarks/bench_fused_mlp.py [--quick]
+
+Note: on CPU the Pallas paths run in interpret mode — latency numbers are
+only meaningful on TPU; --quick exists for CI smoke coverage.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro.core import pwl, registry
+from repro.kernels import fused, ops
+
+try:  # package-style (python -m benchmarks.run) or script-style invocation
+    from .common import emit, time_fn
+except ImportError:
+    from common import emit, time_fn
+
+
+def make_mlp(mode: str, table):
+    if mode == "exact":
+        from repro.core import functions as F
+
+        act = F.get(table.name).fn
+    elif mode == "pwl":
+        def act(x):
+            return pwl.eval_coeff(x, table)
+    elif mode == "pwl_kernel":
+        def act(x):
+            return ops.pwl_activation(x, table)
+
+    if mode == "pwl_fused":
+        @jax.jit
+        def mlp(x, wg, wu, wd):
+            return fused.fused_glu(x, wg, wu, table=table) @ wd
+    else:
+        @jax.jit
+        def mlp(x, wg, wu, wd):
+            return (act(x @ wg) * (x @ wu)) @ wd
+
+    return mlp
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="tiny shapes (CI smoke)")
+    ap.add_argument("--tokens", type=int, default=4096)
+    ap.add_argument("--d-model", type=int, default=2048)
+    ap.add_argument("--d-ff", type=int, default=8192)
+    ap.add_argument("--activation", default="gelu")
+    ap.add_argument("--breakpoints", type=int, default=32)
+    # parse_known_args: tolerate the runner's own flags (benchmarks/run.py
+    # calls main() with run.py's sys.argv still in place)
+    args, _ = ap.parse_known_args(argv)
+
+    if jax.default_backend() == "cpu" and not args.quick:
+        # interpret-mode latency is validation-only; full shapes would take
+        # minutes per call on CPU without telling us anything
+        print("# cpu backend: forcing --quick shapes (interpret mode)")
+        args.quick = True
+    if args.quick:
+        args.tokens, args.d_model, args.d_ff = 256, 256, 512
+    iters = 3 if args.quick else 10
+
+    table = registry.get_table(args.activation, args.breakpoints)
+    k = jax.random.PRNGKey(0)
+    dtype = jnp.float32 if jax.default_backend() == "cpu" else jnp.bfloat16
+    x = jax.random.normal(k, (args.tokens, args.d_model), dtype)
+    wg = jax.random.normal(k, (args.d_model, args.d_ff), dtype) * 0.02
+    wu = jax.random.normal(k, (args.d_model, args.d_ff), dtype) * 0.02
+    wd = jax.random.normal(k, (args.d_ff, args.d_model), dtype) * 0.02
+
+    print(f"# backend={jax.default_backend()} tokens={args.tokens} "
+          f"d_model={args.d_model} d_ff={args.d_ff} act={args.activation}")
+    base = None
+    for mode in ("exact", "pwl", "pwl_kernel", "pwl_fused"):
+        us = time_fn(make_mlp(mode, table), x, wg, wu, wd,
+                     warmup=1 if args.quick else 2, iters=iters)
+        if base is None:
+            base = us
+        emit(f"glu_mlp_{mode}", us, f"{base / us:.2f}x_vs_exact")
+
+
+if __name__ == "__main__":
+    main()

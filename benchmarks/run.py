@@ -18,6 +18,7 @@ BENCHMARKS = [
     ("fig5_error_sweep", "benchmarks.bench_fig5_error_sweep"),
     ("fig4_throughput", "benchmarks.bench_fig4_throughput"),
     ("table3_model_accuracy", "benchmarks.bench_table3_model_accuracy"),
+    ("fused_mlp", "benchmarks.bench_fused_mlp"),
     ("roofline", "benchmarks.bench_roofline"),
 ]
 

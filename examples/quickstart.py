@@ -1,9 +1,13 @@
 """Quickstart: fit a non-uniform PWL table to GELU (the paper's core loop),
-compare against the uniform baseline, and evaluate it through the Pallas
-kernel — 60 seconds on a laptop CPU.
+compare against the uniform baseline, evaluate it through the Pallas kernel,
+and run a whole model with PWL activations fused into its MLP gemms —
+60 seconds on a laptop CPU.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import dataclasses
+
+import jax
 import jax.numpy as jnp
 
 import repro  # noqa: F401
@@ -36,6 +40,26 @@ def main():
 
     table32 = registry.get_table("gelu", 32)
     print(f"shipped 32-bp table MSE on [-8,8]: {pwl.mse(table32, spec, -8, 8):.3e}")
+
+    # 4. the model path: act_impl="pwl_fused" evaluates PWL activations as
+    #    epilogues INSIDE the MLP gemms (kernels/fused/) — one HBM pass for
+    #    matmul + activation + gating instead of three.
+    from repro.configs.repro_100m import reduced
+    from repro.models import Model
+
+    vocab = reduced().vocab_size
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, vocab),
+        "targets": jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, vocab),
+    }
+    logits = {}
+    for impl in ("pwl", "pwl_fused"):
+        cfg = dataclasses.replace(reduced(), act_impl=impl, dtype=jnp.float32)
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        logits[impl], _ = model.forward(params, batch)
+    err = float(jnp.max(jnp.abs(logits["pwl_fused"] - logits["pwl"])))
+    print(f"model logits max |pwl_fused - pwl| (repro-100m reduced): {err:.2e}")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,4 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Flex-SFU compute kernels (see README.md for the ASIC -> TPU mapping):
+#   pwl_act.py / ops.py / ref.py — standalone elementwise PWL kernels
+#   fused/                       — PWL activations as epilogues of matmul,
+#                                  GLU, and norm kernels (act_impl="pwl_fused")

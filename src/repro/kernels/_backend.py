@@ -1,0 +1,11 @@
+"""Backend dispatch shared by the standalone and fused kernel wrappers."""
+from __future__ import annotations
+
+import jax
+
+
+def should_interpret() -> bool:
+    """Interpret Pallas kernels off-TPU so the kernel bodies are validated
+    everywhere (CPU CI, GPU hosts) while TPU gets the compiled Mosaic path —
+    these are TPU kernels, and only TPU can lower them."""
+    return jax.default_backend() != "tpu"

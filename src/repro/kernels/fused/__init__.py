@@ -1,0 +1,28 @@
+"""Fused Pallas kernels: PWL activations as epilogues of producer kernels.
+
+The Flex-SFU ASIC removes the activation round-trip next to the MAC array;
+on TPU the equivalent win is evaluating the non-uniform PWL table inside the
+kernel that produced the pre-activation.  This package provides:
+
+  epilogue  — the tile-level PWL decode (shared with kernels/pwl_act.py)
+              plus identity / exact-activation epilogue plans
+  linear    — fused  y = act(x @ W + b)        (blocked matmul + epilogue)
+  glu       — fused  y = act(x @ Wg) * (x @ Wu) (the GLU-MLP hot path)
+  norm      — fused RMSNorm (+ optional activation epilogue)
+
+Models opt in via ``ModelConfig.act_impl = "pwl_fused"`` (see
+core/registry.py and models/layers.py); non-fusable sites fall back to the
+unfused PWL path automatically.
+"""
+from .epilogue import (  # noqa: F401
+    IDENTITY,
+    EpiloguePlan,
+    exact_plan,
+    pack_table,
+    plan_and_operands,
+    pwl_eval_tile,
+    pwl_value_and_slope_tile,
+)
+from .glu import fused_glu  # noqa: F401
+from .linear import fused_linear  # noqa: F401
+from .norm import fused_rmsnorm  # noqa: F401

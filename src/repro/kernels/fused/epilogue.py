@@ -1,0 +1,149 @@
+"""Tile-level activation epilogues for fused Pallas kernels.
+
+The paper's insight is architectural: activation evaluation belongs *inside*
+the datapath that produced the pre-activation, not in a separate pass over
+memory.  On TPU the equivalent of Flex-SFU's "SFU next to the MAC array" is a
+kernel *epilogue*: the PWL decode runs on the accumulator tile while it is
+still in VMEM, before writeback — one HBM round-trip instead of three.
+
+An ``EpiloguePlan`` is the *static* half of an epilogue: a hashable spec
+(kind + breakpoint count) that selects the tile function and declares the
+table operands the kernel needs.  The *dynamic* half — the packed table
+arrays — is produced by :func:`plan_and_operands` and passed as ordinary
+kernel inputs (tiny, replicated to every grid step, the ``ld.bp()/ld.cf()``
+analogue).  The split keeps the plan usable as a ``jax.jit`` static argument.
+
+``pwl_eval_tile`` is the single source of truth for the delta-accumulation
+decode; the standalone kernel in ``kernels/pwl_act.py`` and every fused
+kernel in this package call it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import functions as F
+from repro.core.pwl import PWLTable
+
+
+def pwl_value_and_slope_tile(x, bp_ref, dmq_ref, n_bp: int):
+    """Delta-accumulation PWL decode on one tile: (f̂(x), slope m(x)), f32.
+
+    bp_ref:  (n_bp, 1)    sorted breakpoints
+    dmq_ref: (n_bp+1, 2)  row 0 = (m_0, q_0); row i+1 = (dm_i, dq_i)
+
+    Ordered segments mean the coefficient of the segment containing x equals
+    the base coefficient plus the sum of deltas of breakpoints left of x, so
+    the whole decode is n_bp full-rate VPU compares + 2 FMAs each — no
+    gather, no per-lane divergence, and O(x.size) temporaries (never an
+    (..., n_bp) one-hot).  Works on kernel refs and plain jnp arrays alike.
+    """
+    xf = x.astype(jnp.float32)
+    m = jnp.full_like(xf, dmq_ref[0, 0])
+    q = jnp.full_like(xf, dmq_ref[0, 1])
+    for i in range(n_bp):  # static unroll: n_bp <= 64
+        cmp = (xf > bp_ref[i, 0]).astype(jnp.float32)
+        m = m + cmp * dmq_ref[i + 1, 0]
+        q = q + cmp * dmq_ref[i + 1, 1]
+    return m * xf + q, m
+
+
+def pwl_eval_tile(x, bp_ref, dmq_ref, n_bp: int):
+    """PWL value only (see :func:`pwl_value_and_slope_tile`)."""
+    return pwl_value_and_slope_tile(x, bp_ref, dmq_ref, n_bp)[0]
+
+
+def pack_table(table: PWLTable):
+    """Pack (bp, m, q) into the delta layout the tile function consumes."""
+    import numpy as np
+
+    m = np.asarray(table.m, np.float32)
+    q = np.asarray(table.q, np.float32)
+    dmq = np.empty((m.shape[0], 2), np.float32)
+    dmq[0, 0], dmq[0, 1] = m[0], q[0]
+    dmq[1:, 0] = np.diff(m)
+    dmq[1:, 1] = np.diff(q)
+    bp = np.asarray(table.bp, np.float32).reshape(-1, 1)
+    return jnp.asarray(bp), jnp.asarray(dmq)
+
+
+@dataclasses.dataclass(frozen=True)
+class EpiloguePlan:
+    """Hashable epilogue spec — safe to pass as a jit static argument.
+
+    kind: "identity" | "exact:<fn-name>" | "pwl"
+    n_bp: breakpoint count (pwl only; fixes the static unroll depth).
+    """
+
+    kind: str = "identity"
+    n_bp: int = 0
+
+    def table_specs(self):
+        """(rows, cols) shapes of the table operands this plan consumes."""
+        if self.kind == "pwl":
+            return ((self.n_bp, 1), (self.n_bp + 1, 2))
+        return ()
+
+    @property
+    def n_operands(self) -> int:
+        return len(self.table_specs())
+
+    def apply(self, x, *table_refs):
+        """Evaluate the epilogue on a tile.  Returns f32."""
+        if self.kind == "identity":
+            return x.astype(jnp.float32)
+        if self.kind == "pwl":
+            bp_ref, dmq_ref = table_refs
+            return pwl_eval_tile(x, bp_ref, dmq_ref, self.n_bp)
+        if self.kind.startswith("exact:"):
+            fn = F.get(self.kind.split(":", 1)[1]).fn
+            return fn(x.astype(jnp.float32))
+        raise ValueError(f"unknown epilogue kind '{self.kind}'")
+
+
+IDENTITY = EpiloguePlan("identity")
+
+
+def plan_value_and_slope(plan: EpiloguePlan, tables, z):
+    """jnp-level (act(z), act'(z)) for a plan — the VJP recompute path.
+
+    Used by the custom backward passes of the fused kernels: the forward
+    runs fused in Pallas, the backward rematerializes the pre-activation and
+    needs the activation value and its elementwise derivative.  For the PWL
+    plan the derivative is exactly the per-segment slope m(z) (a.e., ignoring
+    the breakpoint null set — identical to autodiff of ``eval_coeff``).
+    """
+    zf = z.astype(jnp.float32)
+    if plan.kind == "identity":
+        return zf, jnp.ones_like(zf)
+    if plan.kind == "pwl":
+        bp, dmq = tables  # (n, 1), (n+1, 2)
+        return pwl_value_and_slope_tile(zf, bp, dmq, plan.n_bp)
+    if plan.kind.startswith("exact:"):
+        fn = F.get(plan.kind.split(":", 1)[1]).fn
+        a, vjp = jax.vjp(fn, zf)
+        return a, vjp(jnp.ones_like(zf))[0]  # elementwise fn -> derivative
+    raise ValueError(f"unknown epilogue kind '{plan.kind}'")
+
+
+def exact_plan(name: str) -> EpiloguePlan:
+    """Exact-activation epilogue (jnp transcendental inside the kernel)."""
+    F.get(name)  # validate early
+    return EpiloguePlan(f"exact:{name}")
+
+
+def plan_and_operands(table: PWLTable | None, act: str | None = None):
+    """Resolve (plan, operands) from the user-facing (table, act) arguments.
+
+    table -> PWL epilogue; act -> exact epilogue; neither -> identity.
+    """
+    if table is not None and act is not None:
+        raise ValueError("pass either table= (PWL epilogue) or act= (exact), not both")
+    if table is not None:
+        bp, dmq = pack_table(table)
+        return EpiloguePlan("pwl", int(bp.shape[0])), (bp, dmq)
+    if act is not None:
+        return exact_plan(act), ()
+    return IDENTITY, ()

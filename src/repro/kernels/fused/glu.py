@@ -1,0 +1,143 @@
+"""Fused GLU / SwiGLU / GEGLU Pallas kernel: ``act(x @ Wg) * (x @ Wu)``.
+
+The MLP hot path of nearly every config in ``repro/configs``.  Unfused, this
+costs two gemms, a full elementwise activation pass, and a full elementwise
+multiply — the intermediate (tokens, d_ff) gate/up activations each make an
+HBM round-trip.  Here both gemms share the x tile (read once per (i, k)
+step), accumulate in two f32 VMEM scratch tiles, and on the last k step the
+PWL epilogue evaluates on the gate accumulator and multiplies with the up
+accumulator before the single writeback.  Activation + gating are free.
+
+Grid and padding conventions are identical to ``fused/linear.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.pwl import PWLTable
+
+from .._backend import should_interpret
+from .epilogue import EpiloguePlan, plan_and_operands, plan_value_and_slope
+from .linear import DEFAULT_BLOCK, _aligned_block, _pad_to
+
+
+def _glu_kernel(*refs, plan: EpiloguePlan, nk: int):
+    n_tab = plan.n_operands
+    x_ref, wg_ref, wu_ref = refs[0], refs[1], refs[2]
+    tab_refs = refs[3 : 3 + n_tab]
+    o_ref, accg_ref, accu_ref = refs[3 + n_tab], refs[4 + n_tab], refs[5 + n_tab]
+
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        accg_ref[...] = jnp.zeros_like(accg_ref)
+        accu_ref[...] = jnp.zeros_like(accu_ref)
+
+    x = x_ref[...]
+    accg_ref[...] += jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+    accu_ref[...] += jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _():
+        g = plan.apply(accg_ref[...], *tab_refs)
+        o_ref[...] = (g * accu_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "block", "interpret"))
+def _fused_glu_2d(x, wg, wu, tables, *, plan, block, interpret):
+    M, K = x.shape
+    N = wg.shape[1]
+    bm, bn, bk = _aligned_block(block, (M, N, K), x.dtype)
+    xp = _pad_to(x, (bm, bk))
+    wgp = _pad_to(wg, (bk, bn))
+    wup = _pad_to(wu, (bk, bn))
+    Mp, Kp = xp.shape
+    Np = wgp.shape[1]
+    nk = Kp // bk
+    grid = (Mp // bm, Np // bn, nk)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+    ]
+    for rows, cols in plan.table_specs():
+        in_specs.append(pl.BlockSpec((rows, cols), lambda i, j, k: (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_glu_kernel, plan=plan, nk=nk),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, bn), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, wgp, wup, *tables)
+    return out[:M, :N]
+
+
+# --- autodiff: fused forward, pure-jnp recompute backward ------------------
+# (see fused/linear.py for the rationale)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _glu_op(x, wg, wu, tables, plan, block, interpret):
+    return _fused_glu_2d(x, wg, wu, tables, plan=plan, block=block,
+                         interpret=interpret)
+
+
+def _glu_op_fwd(x, wg, wu, tables, plan, block, interpret):
+    y = _glu_op(x, wg, wu, tables, plan, block, interpret)
+    return y, (x, wg, wu, tables)
+
+
+def _glu_op_bwd(plan, block, interpret, res, g):
+    x, wg, wu, tables = res
+    xf, wgf, wuf, gf = (a.astype(jnp.float32) for a in (x, wg, wu, g))
+    zg = xf @ wgf
+    zu = xf @ wuf
+    act_zg, slope = plan_value_and_slope(plan, tables, zg)
+    dzg = gf * zu * slope
+    dzu = gf * act_zg
+    dx = (dzg @ wgf.T + dzu @ wuf.T).astype(x.dtype)
+    dwg = (xf.T @ dzg).astype(wg.dtype)
+    dwu = (xf.T @ dzu).astype(wu.dtype)
+    dtables = jax.tree_util.tree_map(jnp.zeros_like, tables)
+    return dx, dwg, dwu, dtables
+
+
+_glu_op.defvjp(_glu_op_fwd, _glu_op_bwd)
+
+
+def fused_glu(
+    x: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    *,
+    table: PWLTable | None = None,
+    act: str | None = None,
+    block=DEFAULT_BLOCK,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """``act(x @ w_gate) * (x @ w_up)`` in one kernel pass.
+
+    x: (..., K);  w_gate/w_up: (K, N).  Epilogue selection as in
+    :func:`fused_linear` (table -> PWL, act -> exact, neither -> identity,
+    which degenerates to plain bilinear GLU).
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    plan, tables = plan_and_operands(table, act)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = _glu_op(x2, w_gate, w_up, tables, plan, block, interpret)
+    return y.reshape(*lead, w_gate.shape[1])

@@ -1,0 +1,185 @@
+"""Fused ``y = act(x @ W + b)`` Pallas kernel (PWL epilogue on the MXU tile).
+
+Classic blocked matmul: grid (M/bm, N/bn, K/bk) with k innermost (TPU grids
+iterate minor-to-major sequentially, so the f32 accumulator scratch is valid
+across k steps for each (i, j) tile).  On the last k step the epilogue —
+identity, exact activation, or the Flex-SFU non-uniform PWL decode — runs on
+the accumulator while it is still in VMEM, then casts and writes back.  The
+activation therefore costs zero extra HBM traffic, mirroring the paper's
+"SFU beside the MAC array" placement.
+
+Shape handling mirrors ``kernels/ops.py``: leading dims are flattened and
+every dim is zero-padded to its block multiple (zeros in x/W contribute
+nothing to the accumulator; padded output rows/cols are sliced away).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.pwl import PWLTable
+
+from .._backend import should_interpret
+from .epilogue import EpiloguePlan, plan_and_operands, plan_value_and_slope
+
+# (bm, bn, bk): 128-aligned, x/w/acc tiles ~256 KiB total in f32.
+DEFAULT_BLOCK = (256, 256, 512)
+
+
+def _round_up(d: int, m: int) -> int:
+    return -(-d // m) * m
+
+
+def _aligned_block(block, dims, dtype):
+    """Clamp block sizes to the (padded) dims WITHOUT breaking TPU tiling.
+
+    Mosaic needs sublane dims aligned to 8 (f32) / 16 (2-byte dtypes) and
+    lane dims to 128; interpret mode accepts anything, so naive min(block, d)
+    would pass CPU CI yet fail to lower on hardware for small/odd dims.
+    bk serves as lane of the x tile and sublane of the w tile -> 128 covers
+    both; bm is sublane-only; bn lane-only."""
+    m, n, k = dims
+    sub = 16 if jnp.dtype(dtype).itemsize == 2 else 8
+    bm = min(block[0], _round_up(m, sub))
+    bn = min(block[1], _round_up(n, 128))
+    bk = min(block[2], _round_up(k, 128))
+    return bm, bn, bk
+
+
+def _linear_kernel(*refs, plan: EpiloguePlan, nk: int, has_bias: bool):
+    n_tab = plan.n_operands
+    x_ref, w_ref = refs[0], refs[1]
+    off = 2 + (1 if has_bias else 0)
+    b_ref = refs[2] if has_bias else None
+    tab_refs = refs[off : off + n_tab]
+    o_ref, acc_ref = refs[off + n_tab], refs[off + n_tab + 1]
+
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _():
+        acc = acc_ref[...]
+        if has_bias:
+            acc = acc + b_ref[...].astype(jnp.float32)
+        o_ref[...] = plan.apply(acc, *tab_refs).astype(o_ref.dtype)
+
+
+def _pad_to(x, mults):
+    pads = [(0, -(-d // m) * m - d) for d, m in zip(x.shape, mults)]
+    if any(p[1] for p in pads):
+        x = jnp.pad(x, pads)
+    return x
+
+
+@functools.partial(
+    jax.jit, static_argnames=("plan", "block", "interpret", "has_bias")
+)
+def _fused_linear_2d(x, w, b, tables, *, plan, block, interpret, has_bias):
+    M, K = x.shape
+    N = w.shape[1]
+    bm, bn, bk = _aligned_block(block, (M, N, K), x.dtype)
+    xp = _pad_to(x, (bm, bk))
+    wp = _pad_to(w, (bk, bn))
+    Mp, Kp = xp.shape
+    Np = wp.shape[1]
+    nk = Kp // bk
+    grid = (Mp // bm, Np // bn, nk)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+    ]
+    operands = [xp, wp]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k: (0, j)))
+        operands.append(_pad_to(b.reshape(1, N), (1, bn)))
+    for rows, cols in plan.table_specs():
+        in_specs.append(pl.BlockSpec((rows, cols), lambda i, j, k: (0, 0)))
+    operands.extend(tables)
+
+    out = pl.pallas_call(
+        functools.partial(_linear_kernel, plan=plan, nk=nk, has_bias=has_bias),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(*operands)
+    return out[:M, :N]
+
+
+# --- autodiff: fused forward, pure-jnp recompute backward ------------------
+# pallas_call has no VJP; training through act_impl="pwl_fused" still has to
+# work, so the backward rematerializes z = x @ w (+ b) and uses the plan's
+# elementwise derivative (for PWL: the per-segment slope m(z), identical to
+# autodiff of the unfused eval_coeff).  Backward fusion is a ROADMAP item.
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _linear_op(x, w, b, tables, plan, block, interpret, has_bias):
+    return _fused_linear_2d(
+        x, w, b, tables, plan=plan, block=block, interpret=interpret,
+        has_bias=has_bias,
+    )
+
+
+def _linear_op_fwd(x, w, b, tables, plan, block, interpret, has_bias):
+    y = _linear_op(x, w, b, tables, plan, block, interpret, has_bias)
+    return y, (x, w, b, tables)
+
+
+def _linear_op_bwd(plan, block, interpret, has_bias, res, g):
+    x, w, b, tables = res
+    xf, wf, gf = (a.astype(jnp.float32) for a in (x, w, g))
+    z = xf @ wf
+    if has_bias:
+        z = z + b.astype(jnp.float32)
+    _, slope = plan_value_and_slope(plan, tables, z)
+    dz = gf * slope
+    dx = (dz @ wf.T).astype(x.dtype)
+    dw = (xf.T @ dz).astype(w.dtype)
+    db = jnp.sum(dz, axis=0).astype(b.dtype) if has_bias else None
+    dtables = jax.tree_util.tree_map(jnp.zeros_like, tables)
+    return dx, dw, db, dtables
+
+
+_linear_op.defvjp(_linear_op_fwd, _linear_op_bwd)
+
+
+def fused_linear(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    *,
+    table: PWLTable | None = None,
+    act: str | None = None,
+    block=DEFAULT_BLOCK,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """``act(x @ w + b)`` in one kernel pass.
+
+    x: (..., K);  w: (K, N);  b: (N,) optional.
+    table: PWL epilogue (Flex-SFU decode on the accumulator tile).
+    act:   exact-activation epilogue by name (mutually exclusive with table).
+    Neither -> identity epilogue (plain blocked matmul).
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    plan, tables = plan_and_operands(table, act)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = _linear_op(x2, w, b, tables, plan, block, interpret, b is not None)
+    return y.reshape(*lead, w.shape[1])

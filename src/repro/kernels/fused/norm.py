@@ -1,0 +1,135 @@
+"""Fused RMSNorm Pallas kernel (row reduction + scale + optional epilogue).
+
+One pass over the rows: the f32 mean-square reduction, rsqrt, the
+``(1 + scale)`` gain, and an optional activation epilogue all run on the VMEM
+tile before a single writeback — versus the unfused path's separate
+square/mean/rsqrt/multiply HLOs.  Matches ``models/layers.rms_norm``
+numerics (f32 internal, cast back to input dtype).
+
+Rows are tiled; the feature dim stays whole in VMEM (d_model tops out at a
+few thousand — a (256, 8192) f32 tile is 8 MiB, still under the 16 MiB VMEM
+budget; shrink ``block_rows`` for wider models).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.pwl import PWLTable
+
+from .._backend import should_interpret
+from .epilogue import EpiloguePlan, plan_and_operands, plan_value_and_slope
+from .linear import _pad_to, _round_up
+
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _rmsnorm_kernel(*refs, plan: EpiloguePlan, eps: float, d: int):
+    n_tab = plan.n_operands
+    x_ref, s_ref = refs[0], refs[1]
+    tab_refs = refs[2 : 2 + n_tab]
+    o_ref = refs[2 + n_tab]
+
+    xf = x_ref[...].astype(jnp.float32)
+    # mean over the TRUE feature width: padded cols are zero and x*0 = 0,
+    # but the divisor must be d, not the padded width.
+    var = jnp.sum(jnp.square(xf), axis=-1, keepdims=True) / d
+    y = xf * jax.lax.rsqrt(var + eps)
+    y = y * (1.0 + s_ref[...].astype(jnp.float32))
+    o_ref[...] = plan.apply(y, *tab_refs).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("plan", "block_rows", "eps", "interpret")
+)
+def _fused_rmsnorm_2d(x, scale, tables, *, plan, block_rows, eps, interpret):
+    M, D = x.shape
+    # sublane-align the row tile (8 f32 / 16 bf16) — see linear._aligned_block
+    sub = 16 if jnp.dtype(x.dtype).itemsize == 2 else 8
+    bm = min(block_rows, _round_up(M, sub))
+    xp = _pad_to(x, (bm, 128))
+    sp = _pad_to(scale.reshape(1, D), (1, 128))
+    Mp, Dp = xp.shape
+    grid = (Mp // bm,)
+
+    in_specs = [
+        pl.BlockSpec((bm, Dp), lambda i: (i, 0)),
+        pl.BlockSpec((1, Dp), lambda i: (0, 0)),
+    ]
+    for rows, cols in plan.table_specs():
+        in_specs.append(pl.BlockSpec((rows, cols), lambda i: (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, plan=plan, eps=eps, d=D),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, Dp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Dp), x.dtype),
+        interpret=interpret,
+    )(xp, sp, *tables)
+    return out[:M, :D]
+
+
+# --- autodiff: fused forward, jnp-reference backward -----------------------
+# (see fused/linear.py for the rationale; here the backward is jax.vjp of a
+# jnp mirror of the kernel — the PWL step function contributes gradient only
+# through the affine MADD, matching autodiff of the unfused eval_coeff)
+
+
+def _rmsnorm_ref_jnp(x, scale, tables, plan, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return plan_value_and_slope(plan, tables, y)[0].astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _rmsnorm_op(x, scale, tables, plan, block_rows, eps, interpret):
+    return _fused_rmsnorm_2d(x, scale, tables, plan=plan,
+                             block_rows=block_rows, eps=eps,
+                             interpret=interpret)
+
+
+def _rmsnorm_op_fwd(x, scale, tables, plan, block_rows, eps, interpret):
+    y = _rmsnorm_op(x, scale, tables, plan, block_rows, eps, interpret)
+    return y, (x, scale, tables)
+
+
+def _rmsnorm_op_bwd(plan, block_rows, eps, interpret, res, g):
+    x, scale, tables = res
+    _, vjp = jax.vjp(
+        lambda x_, s_: _rmsnorm_ref_jnp(x_, s_, tables, plan, eps), x, scale
+    )
+    dx, ds = vjp(g)
+    dtables = jax.tree_util.tree_map(jnp.zeros_like, tables)
+    return dx, ds, dtables
+
+
+_rmsnorm_op.defvjp(_rmsnorm_op_fwd, _rmsnorm_op_bwd)
+
+
+def fused_rmsnorm(
+    x: jax.Array,
+    scale: jax.Array,
+    *,
+    eps: float = 1e-6,
+    table: PWLTable | None = None,
+    act: str | None = None,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """RMSNorm (optionally + activation) in one kernel pass.
+
+    x: (..., D);  scale: (D,) — applied as ``(1 + scale)`` like
+    ``layers.rms_norm``.  Epilogue selection as in :func:`fused_linear`.
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    plan, tables = plan_and_operands(table, act)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    y = _rmsnorm_op(x2, scale, tables, plan, block_rows, eps, interpret)
+    return y.reshape(*lead, x.shape[-1])

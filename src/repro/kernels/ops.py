@@ -10,26 +10,17 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.pwl import PWLTable
 
 from . import pwl_act
-
-
-def _should_interpret() -> bool:
-    return jax.default_backend() == "cpu"
+from ._backend import should_interpret as _should_interpret
+from .fused import epilogue as fused_epilogue
 
 
 def pack_nonuniform(table: PWLTable):
-    """Pack (bp, m, q) into the kernel's delta layout: (bp, dmq)."""
-    m = np.asarray(table.m, np.float32)
-    q = np.asarray(table.q, np.float32)
-    dmq = np.empty((m.shape[0], 2), np.float32)
-    dmq[0, 0], dmq[0, 1] = m[0], q[0]
-    dmq[1:, 0] = np.diff(m)
-    dmq[1:, 1] = np.diff(q)
-    return jnp.asarray(np.asarray(table.bp, np.float32)), jnp.asarray(dmq)
+    """Pack (bp, m, q) into the kernel's delta layout: (bp (n,1), dmq)."""
+    return fused_epilogue.pack_table(table)
 
 
 def pack_uniform(m, q):

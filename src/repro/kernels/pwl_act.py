@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .fused.epilogue import pwl_eval_tile
+
 # Tile shape: 8x128-aligned, sized so x-tile + out-tile (f32) stay well under
 # VMEM (2 * 256*512*4B = 1 MiB) while amortizing grid overhead.
 DEFAULT_BLOCK = (256, 512)
@@ -40,15 +42,11 @@ def _pwl_nonuniform_kernel(x_ref, bp_ref, dmq_ref, o_ref, *, n_bp: int):
 
     bp_ref:  (n_bp, 1)    sorted breakpoints
     dmq_ref: (n_bp+1, 2)  row 0 = (m_0, q_0); row i+1 = (dm_i, dq_i)
+
+    The decode itself lives in ``fused.epilogue.pwl_eval_tile`` so the
+    standalone kernel and every fused-epilogue kernel share one body.
     """
-    x = x_ref[...].astype(jnp.float32)
-    m = jnp.full_like(x, dmq_ref[0, 0])
-    q = jnp.full_like(x, dmq_ref[0, 1])
-    for i in range(n_bp):  # static unroll: n_bp <= 64
-        cmp = (x > bp_ref[i, 0]).astype(jnp.float32)
-        m = m + cmp * dmq_ref[i + 1, 0]
-        q = q + cmp * dmq_ref[i + 1, 1]
-    o_ref[...] = (m * x + q).astype(o_ref.dtype)
+    o_ref[...] = pwl_eval_tile(x_ref[...], bp_ref, dmq_ref, n_bp).astype(o_ref.dtype)
 
 
 def _pwl_uniform_kernel(x_ref, dmq_ref, o_ref, *, n_seg: int, lo: float, inv_h: float):
@@ -88,7 +86,10 @@ def pwl_nonuniform_2d(
     block=DEFAULT_BLOCK,
     interpret: bool = False,
 ) -> jax.Array:
-    """pallas_call wrapper over a padded 2-D input (see ops.pwl_activation)."""
+    """pallas_call wrapper over a padded 2-D input (see ops.pwl_activation).
+
+    ``bp`` may be the packed (n, 1) layout or a raw 1-D breakpoint array.
+    """
     n_bp = bp.shape[0]
     r, c = x2d.shape
     bm, bn = min(block[0], r), min(block[1], c)

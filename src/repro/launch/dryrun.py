@@ -32,6 +32,7 @@ import traceback
 import jax
 
 from repro.configs import ARCH_IDS, get_config
+from repro.core import registry
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_step
 from repro.models import SHAPE_CELLS
@@ -242,7 +243,7 @@ def main(argv=None):
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multipod-only", action="store_true")
     ap.add_argument("--singlepod-only", action="store_true")
-    ap.add_argument("--act-impl", default="pwl", choices=["exact", "pwl", "pwl_kernel"])
+    ap.add_argument("--act-impl", default="pwl", choices=list(registry.MODES))
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args(argv)
 

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_reduced_config
+from repro.core import registry
 from repro.models import Model
 
 
@@ -42,7 +43,7 @@ def serve(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--act-impl", default="pwl", choices=["exact", "pwl", "pwl_kernel"])
+    ap.add_argument("--act-impl", default="pwl", choices=list(registry.MODES))
     args = ap.parse_args(argv)
 
     getter = get_reduced_config if args.reduced else get_config

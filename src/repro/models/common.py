@@ -45,7 +45,7 @@ class ModelConfig:
     mlp_type: str = "swiglu"          # swiglu | geglu | mlp
     norm_type: str = "rmsnorm"        # rmsnorm | layernorm | nonparam_ln
     qkv_bias: bool = False
-    act_impl: str = "exact"           # exact | pwl | pwl_kernel
+    act_impl: str = "exact"           # exact | pwl | pwl_kernel | pwl_fused
     act_breakpoints: int = 32
     # functions kept exact even under act_impl="pwl"; entries may be
     # site-qualified ("ssm:silu").  SSM-input activations amplify

@@ -389,31 +389,69 @@ def _flash_or_sliced(cfg, q, k, v, *, causal, window, exp_fn):
 # MLPs
 
 
-def mlp(cfg: ModelConfig, params, x):
-    """Dense FFN: swiglu / geglu / plain, activation via the PWL registry."""
-    act = registry.resolve_for(cfg, cfg.activation)
+def _fused_mlp_hidden(cfg: ModelConfig, params, x):
+    """Fused-kernel hidden state for act_impl="pwl_fused": the PWL activation
+    runs as an epilogue inside the gemm that produced it (kernels/fused/), so
+    the (tokens, d_ff) pre-activation never round-trips HBM.  Returns None
+    when this site must fall back to the unfused path: exempt activation, or
+    a multi-device mesh is active (GSPMD cannot partition a pallas_call, so
+    the fused kernel would force replicated compute/traffic the unfused
+    path's sharding constraints exist to avoid — per-shard fused dispatch
+    via shard_map is a ROADMAP item)."""
+    from repro.distributed.sharding import _ACTIVE
+    from repro.kernels import fused
+
+    rules = _ACTIVE.get()
+    if rules is not None and rules.mesh is not None and rules.mesh.size > 1:
+        return None
+    table = registry.fused_table_for(cfg, cfg.activation)
+    if table is None:
+        return None
     dtype = x.dtype
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return fused.fused_glu(
+            x, params["w_gate"].astype(dtype), params["w_up"].astype(dtype),
+            table=table,
+        )
+    return fused.fused_linear(
+        x, params["w_in"].astype(dtype),
+        params["b_in"].astype(dtype) if "b_in" in params else None,
+        table=table,
+    )
+
+
+def mlp(cfg: ModelConfig, params, x):
+    """Dense FFN: swiglu / geglu / plain, activation via the PWL registry.
+
+    Under act_impl="pwl_fused" the hidden state comes from the fused Pallas
+    kernels; the down-projection tail below is shared with the unfused path.
+    """
+    dtype = x.dtype
+    h = _fused_mlp_hidden(cfg, params, x) if cfg.act_impl == "pwl_fused" else None
     # Megatron-style sequence parallelism: inside the TP region the hidden is
     # sharded on d_ff ONLY (seq replicated) — one all-gather in, one
     # reduce-scatter out per layer.  Constraining seq@model here too would
     # force an activation all-gather per gemm (measured: 6.4 GB/layer on
     # qwen2.5-32b, see EXPERIMENTS.md Sec. Perf).
-    if cfg.mlp_type in ("swiglu", "geglu"):
+    if h is not None:
+        h = constrain(h, "batch", None, "mlp")
+    elif cfg.mlp_type in ("swiglu", "geglu"):
+        act = registry.resolve_for(cfg, cfg.activation)
         g = x @ params["w_gate"].astype(dtype)
         u = x @ params["w_up"].astype(dtype)
         g = constrain(g, "batch", None, "mlp")
         u = constrain(u, "batch", None, "mlp")
         h = act(g) * u
-        y = h @ params["w_down"].astype(dtype)
     else:
+        act = registry.resolve_for(cfg, cfg.activation)
         h = x @ params["w_in"].astype(dtype)
         if "b_in" in params:
             h = h + params["b_in"].astype(dtype)
         h = constrain(h, "batch", None, "mlp")
         h = act(h)
-        y = h @ params["w_down"].astype(dtype)
-        if "b_down" in params:
-            y = y + params["b_down"].astype(dtype)
+    y = h @ params["w_down"].astype(dtype)
+    if "b_down" in params:
+        y = y + params["b_down"].astype(dtype)
     return constrain(y, "batch", "act_seq", "act_embed")
 
 
