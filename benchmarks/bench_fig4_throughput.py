@@ -11,7 +11,8 @@ import jax
 import jax.numpy as jnp
 
 import repro  # noqa: F401
-from repro.core import functions as F, pwl, registry
+from repro.core import functions as F, pwl
+from repro.sfu import get_store
 from repro.kernels import ops, ref
 
 from .common import emit, time_fn
@@ -40,7 +41,7 @@ def main() -> None:
 
     # compiled-op comparison at a fixed shape: exact vs PWL (jnp path)
     x = jax.random.normal(jax.random.PRNGKey(0), (4096, 1024))
-    table = registry.get_table("gelu", 32)
+    table = get_store().get(fn="gelu", n_breakpoints=32)
     f_exact, t_exact = compiled_costs(lambda a: spec.fn(a), x)
     f_pwl, t_pwl = compiled_costs(lambda a: ref.pwl_activation_ref(a, table), x)
     emit("gelu_exact_compiled", 0.0, f"flops={f_exact:.3g};transcendentals={t_exact:.3g}")

@@ -8,9 +8,11 @@ activations.  This benchmark times one GLU MLP block
     y = (act(x @ Wg) * (x @ Wu)) @ Wd
 
 under the four act_impl modes on the current backend.  Emits CSV rows
-``name,us_per_call,derived`` via benchmarks/common.py.
+``name,us_per_call,derived`` via benchmarks/common.py AND a machine-readable
+``BENCH_fused_mlp.json`` (per-mode latency + output MSE vs the exact mode)
+at the repo root, so the perf trajectory is tracked across PRs.
 
-    PYTHONPATH=src python benchmarks/bench_fused_mlp.py [--quick]
+    PYTHONPATH=src python benchmarks/bench_fused_mlp.py [--quick] [--out PATH]
 
 Note: on CPU the Pallas paths run in interpret mode — latency numbers are
 only meaningful on TPU; --quick exists for CI smoke coverage.
@@ -18,13 +20,19 @@ only meaningful on TPU; --quick exists for CI smoke coverage.
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
+import time
 
 import jax
 import jax.numpy as jnp
 
 import repro  # noqa: F401
-from repro.core import pwl, registry
+from repro import sfu
+from repro.core import pwl
 from repro.kernels import fused, ops
+
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_fused_mlp.json"
 
 try:  # package-style (python -m benchmarks.run) or script-style invocation
     from .common import emit, time_fn
@@ -64,6 +72,8 @@ def main(argv=None):
     ap.add_argument("--d-ff", type=int, default=8192)
     ap.add_argument("--activation", default="gelu")
     ap.add_argument("--breakpoints", type=int, default=32)
+    ap.add_argument("--out", default=str(DEFAULT_OUT),
+                    help="machine-readable results JSON path")
     # parse_known_args: tolerate the runner's own flags (benchmarks/run.py
     # calls main() with run.py's sys.argv still in place)
     args, _ = ap.parse_known_args(argv)
@@ -77,7 +87,9 @@ def main(argv=None):
         args.tokens, args.d_model, args.d_ff = 256, 256, 512
     iters = 3 if args.quick else 10
 
-    table = registry.get_table(args.activation, args.breakpoints)
+    table = sfu.get_store().get(
+        fn=args.activation, n_breakpoints=args.breakpoints
+    )
     k = jax.random.PRNGKey(0)
     dtype = jnp.float32 if jax.default_backend() == "cpu" else jnp.bfloat16
     x = jax.random.normal(k, (args.tokens, args.d_model), dtype)
@@ -88,12 +100,39 @@ def main(argv=None):
     print(f"# backend={jax.default_backend()} tokens={args.tokens} "
           f"d_model={args.d_model} d_ff={args.d_ff} act={args.activation}")
     base = None
+    y_exact = None
+    results = {}
     for mode in ("exact", "pwl", "pwl_kernel", "pwl_fused"):
-        us = time_fn(make_mlp(mode, table), x, wg, wu, wd,
+        fn = make_mlp(mode, table)
+        us = time_fn(fn, x, wg, wu, wd,
                      warmup=1 if args.quick else 2, iters=iters)
+        y = fn(x, wg, wu, wd).astype(jnp.float32)
         if base is None:
             base = us
+            y_exact = y
+        mse = float(jnp.mean((y - y_exact) ** 2))
+        results[mode] = {
+            "us_per_call": round(us, 2),
+            "speedup_vs_exact": round(base / us, 4),
+            "mse_vs_exact": mse,
+        }
         emit(f"glu_mlp_{mode}", us, f"{base / us:.2f}x_vs_exact")
+
+    payload = {
+        "benchmark": "fused_mlp",
+        "backend": jax.default_backend(),
+        "interpret_mode": jax.default_backend() != "tpu",
+        "unix_time": int(time.time()),
+        "shape": {"tokens": args.tokens, "d_model": args.d_model,
+                  "d_ff": args.d_ff, "dtype": str(jnp.dtype(dtype))},
+        "activation": args.activation,
+        "breakpoints": args.breakpoints,
+        "quick": bool(args.quick),
+        "modes": results,
+    }
+    out = pathlib.Path(args.out)
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# results -> {out}")
 
 
 if __name__ == "__main__":

@@ -3,8 +3,11 @@
   PYTHONPATH=src python -m benchmarks.run [--only NAME]
 
 Each benchmark prints CSV (`name,us_per_call,derived` or table-specific
-columns).  The roofline benchmark reads experiments/dryrun/*.json
-(produced by `python -m repro.launch.dryrun --all`).
+columns).  The fused_mlp benchmark additionally writes machine-readable
+results (per-mode latency + MSE vs exact) to `BENCH_fused_mlp.json` at the
+repo root so the perf trajectory is tracked across PRs.  The roofline
+benchmark reads experiments/dryrun/*.json (produced by
+`python -m repro.launch.dryrun --all`).
 """
 from __future__ import annotations
 

@@ -1,65 +1,98 @@
 """Quickstart: fit a non-uniform PWL table to GELU (the paper's core loop),
 compare against the uniform baseline, evaluate it through the Pallas kernel,
-and run a whole model with PWL activations fused into its MLP gemms —
-60 seconds on a laptop CPU.
+compile an approximation plan for a whole model, and run that model with PWL
+activations fused into its MLP gemms — 60 seconds on a laptop CPU.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--dry]
+
+``--dry`` skips the slow SGD fit and the model forward (CI smoke: exercises
+the table store, kernel, and plan API surface in a few seconds).
 """
+import argparse
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 
 import repro  # noqa: F401
+from repro import sfu
 from repro.core import fit, functions as F, pwl
 from repro.kernels import ops
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry", action="store_true",
+                    help="fast API-surface smoke (skip the SGD fit + model run)")
+    args = ap.parse_args(argv)
+
     spec = F.get("gelu")
 
     # 1. paper Fig. 2 setup: 5 breakpoints on [-2, 2]
-    cfg = fit.FitConfig(max_steps=1500, max_rounds=3)
-    result = fit.fit("gelu", 5, -2.0, 2.0, cfg)
-    uniform = pwl.make_uniform_table(spec, 5, -2.0, 2.0)
-    mse_u = pwl.mse(uniform, spec, -2.0, 2.0)
-    print(f"uniform MSE      = {mse_u:.3e}")
-    print(f"non-uniform MSE  = {result.mse:.3e}")
-    print(f"improvement      = {mse_u / result.mse:.1f}x   (paper Fig. 2: ~7x)")
-    print(f"breakpoints      = {result.table.bp}")
+    if not args.dry:
+        cfg = fit.FitConfig(max_steps=1500, max_rounds=3)
+        result = fit.fit("gelu", 5, -2.0, 2.0, cfg)
+        uniform = pwl.make_uniform_table(spec, 5, -2.0, 2.0)
+        mse_u = pwl.mse(uniform, spec, -2.0, 2.0)
+        print(f"uniform MSE      = {mse_u:.3e}")
+        print(f"non-uniform MSE  = {result.mse:.3e}")
+        print(f"improvement      = {mse_u / result.mse:.1f}x   (paper Fig. 2: ~7x)")
+        print(f"breakpoints      = {result.table.bp}")
+        demo_table = result.table
+    else:
+        demo_table = sfu.get_store().get(fn="gelu", n_breakpoints=8)
 
     # 2. evaluate through the Pallas kernel (interpret mode on CPU)
     x = jnp.linspace(-4, 4, 1024)
-    y_kernel = ops.pwl_activation(x, result.table)
+    y_kernel = ops.pwl_activation(x, demo_table)
     y_exact = spec.fn(x)
     print(f"kernel max |err| vs exact GELU on [-4,4]: "
           f"{float(jnp.max(jnp.abs(y_kernel - y_exact))):.2e}")
 
-    # 3. production tables ship pre-fitted (32 breakpoints):
-    from repro.core import registry
-
-    table32 = registry.get_table("gelu", 32)
+    # 3. production tables ship pre-fitted; the TableStore keys them by
+    #    (fn, n_breakpoints, dtype, fit fingerprint) and records provenance
+    store = sfu.get_store()
+    table32 = store.get(fn="gelu", n_breakpoints=32)
     print(f"shipped 32-bp table MSE on [-8,8]: {pwl.mse(table32, spec, -8, 8):.3e}")
+    prov = store.provenance("gelu", 32)
+    print(f"table provenance: {prov if prov else '(legacy artifact, none embedded)'}")
+    #    multi-format tables (paper Sec. III): bf16-quantized coefficients
+    t_bf16 = store.get(fn="gelu", n_breakpoints=32, dtype="bf16")
+    err = pwl.mse(t_bf16, spec, -8, 8)
+    print(f"bf16 32-bp table MSE on [-8,8]:    {err:.3e}")
 
-    # 4. the model path: act_impl="pwl_fused" evaluates PWL activations as
-    #    epilogues INSIDE the MLP gemms (kernels/fused/) — one HBM pass for
-    #    matmul + activation + gating instead of three.
+    # 4. the plan API: compile a per-site ActivationPlan from a model config,
+    #    dump the exact plan as JSON (what serve/dryrun runs record), reload
     from repro.configs.repro_100m import reduced
-    from repro.models import Model
 
-    vocab = reduced().vocab_size
-    batch = {
-        "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, vocab),
-        "targets": jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, vocab),
-    }
-    logits = {}
-    for impl in ("pwl", "pwl_fused"):
-        cfg = dataclasses.replace(reduced(), act_impl=impl, dtype=jnp.float32)
-        model = Model(cfg)
-        params = model.init(jax.random.PRNGKey(0))
-        logits[impl], _ = model.forward(params, batch)
-    err = float(jnp.max(jnp.abs(logits["pwl_fused"] - logits["pwl"])))
-    print(f"model logits max |pwl_fused - pwl| (repro-100m reduced): {err:.2e}")
+    cfg100m = dataclasses.replace(reduced(), act_impl="pwl_fused")
+    plan = sfu.compile_plan(cfg100m)
+    print(f"compiled plan {plan.fingerprint}:")
+    for key, s in plan.items():
+        print(f"  {key:24s} -> impl={s.impl} segments={s.n_segments} dtype={s.dtype}")
+    blob = plan.dumps()
+    assert sfu.ActivationPlan.loads(blob) == plan  # lossless JSON round-trip
+    print(f"plan JSON round-trips ({len(blob)} bytes)")
+
+    # 5. the model path: sites planned impl="fused" evaluate PWL activations
+    #    as epilogues INSIDE the MLP gemms (kernels/fused/) — one HBM pass
+    #    for matmul + activation + gating instead of three.
+    if not args.dry:
+        from repro.models import Model
+
+        vocab = reduced().vocab_size
+        batch = {
+            "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, vocab),
+            "targets": jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, vocab),
+        }
+        logits = {}
+        for impl in ("pwl", "pwl_fused"):
+            cfg = dataclasses.replace(reduced(), act_impl=impl, dtype=jnp.float32)
+            model = Model(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+            logits[impl], _ = model.forward(params, batch)
+        err = float(jnp.max(jnp.abs(logits["pwl_fused"] - logits["pwl"])))
+        print(f"model logits max |pwl_fused - pwl| (repro-100m reduced): {err:.2e}")
 
 
 if __name__ == "__main__":

@@ -1,20 +1,23 @@
-"""Generate fitted PWL table artifacts for the registry cache.
+"""Generate fitted PWL table artifacts for the TableStore.
 
 Usage:  PYTHONPATH=src python -m repro.core.gen_tables [--fast]
 
 Writes src/repro/core/tables/<fn>_<n>bp.npz for the activation functions the
-model zoo uses, at the paper's evaluated breakpoint counts.
+model zoo uses, at the paper's evaluated breakpoint counts.  Artifacts are
+written through ``repro.sfu.TableStore.put`` so each one embeds a JSON
+provenance record (fit fingerprint, fit config, error metrics, library
+version, creation time) alongside the coefficient arrays.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import sys
 import time
 
-import numpy as np
+from repro.sfu import DEFAULT_FIT, get_store
 
-from . import fit, pwl
-from .registry import TABLE_DIR
+from . import fit
 
 FUNCTIONS = ["gelu", "gelu_tanh", "silu", "sigmoid", "tanh", "exp", "softplus", "hardswish"]
 BREAKPOINTS = [8, 16, 32, 64]
@@ -27,7 +30,7 @@ def main(argv=None):
     ap.add_argument("--breakpoints", nargs="*", type=int, default=BREAKPOINTS)
     args = ap.parse_args(argv)
 
-    TABLE_DIR.mkdir(exist_ok=True)
+    store = get_store()
     cfg = (
         fit.FitConfig(max_steps=1000, max_rounds=2, init="curvature")
         if args.fast
@@ -35,16 +38,18 @@ def main(argv=None):
     )
     for name in args.functions:
         for n in args.breakpoints:
-            out = TABLE_DIR / f"{name}_{n}bp.npz"
             t0 = time.time()
             r = fit.fit(name, n, cfg=cfg)
-            np.savez(
-                out,
-                bp=np.asarray(r.table.bp),
-                m=np.asarray(r.table.m),
-                q=np.asarray(r.table.q),
+            out = store.put(
+                r.table,
+                fit=DEFAULT_FIT,
                 mse=r.mse,
                 mae=r.mae,
+                extra={
+                    "range": list(r.range),
+                    "fit_config": dataclasses.asdict(cfg),
+                    "generator": "repro.core.gen_tables",
+                },
             )
             print(
                 f"{name:10s} {n:3d}bp  mse={r.mse:.3e} mae={r.mae:.3e} "

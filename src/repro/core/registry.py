@@ -1,130 +1,124 @@
-"""Activation registry: swap exact activations for Flex-SFU PWL versions.
+"""DEPRECATED activation registry — thin shim over :mod:`repro.sfu`.
 
-This is the integration point that makes the paper's technique a first-class
-framework feature: every model in `repro.models` resolves its activations
-through this registry, so one config knob
-(``model.act_impl = "exact" | "pwl" | "pwl_kernel" | "pwl_fused"``,
-``model.act_breakpoints``)
-re-targets the whole network, mirroring the paper's "replace each activation
-with a Flex-SFU op in the compiled graph" flow (Sec. V-C) — without retraining.
+The stringly-typed knob surface that used to live here
+(``act_impl`` magic strings resolved per call site, ``pwl_exempt``,
+``pwl_breakpoint_overrides``, the ``lru_cache`` + npz path convention of
+``get_table``) has been replaced by the approximation-plan API:
 
-Fitted tables are loaded from the on-disk artifact cache
-(``src/repro/core/tables/<fn>_<n>bp.npz``, generated by
-``python -m repro.core.gen_tables``).  A uniform-breakpoint fallback keeps
-tests hermetic when an artifact is missing (warns once).
+  * ``repro.sfu.ApproxSpec``       — (fn, n_segments, dtype, impl, fit)
+  * ``repro.sfu.compile_plan(cfg)``— per-site plans, threaded through the
+                                     models and fused kernels explicitly
+  * ``repro.sfu.TableStore``       — provenance-aware multi-format tables
+
+Every function below still works — it translates its arguments to the plan
+API and emits a ``DeprecationWarning`` — so old code and old-style configs
+run unchanged while they migrate.  Migration table:
+
+  =====================================  ==================================
+  old (this module)                      new (``repro.sfu``)
+  =====================================  ==================================
+  ``get_table(fn, n_bp)``                ``get_store().get(fn=fn,``
+                                         ``n_breakpoints=n_bp)``
+  ``resolve(mode, fn, n_bp)``            ``resolve_spec(ApproxSpec(fn=fn,``
+                                         ``n_segments=n_bp+1,``
+                                         ``impl=LEGACY_IMPL[mode]))``
+  ``resolve_for(cfg, fn, site)``         ``plan_for(cfg).act(key)``
+  ``fused_table_for(cfg, fn, site)``     ``plan_for(cfg).fused_table(key)``
+  ``MODES``                              ``tuple(LEGACY_IMPL)`` (CLI compat)
+  ``cfg.act_impl="pwl"``                 ``ApproxSpec(impl="jnp")``
+  ``cfg.act_breakpoints=32``             ``ApproxSpec(n_segments=33)``
+  ``cfg.pwl_exempt=("ssm:silu",)``       site spec with ``impl="exact"``
+  ``cfg.pwl_breakpoint_overrides``       per-site ``n_segments``
+  (not expressible)                      ``ApproxSpec(dtype="bf16"|"f16")``
+  =====================================  ==================================
+
+Site keys: the legacy ``site`` argument ("" for MLP/MoE call sites, "ssm"
+for Mamba2 gates) maps onto the plan vocabulary ``mlp`` / ``moe.expert`` /
+``ssm`` / ``attn.softmax``; exemption semantics are preserved exactly (bare
+function names match every site, ``"<site>:<fn>"`` only its own).
 """
 from __future__ import annotations
 
-import functools
-import pathlib
 import warnings
 from typing import Callable
 
-import jax.numpy as jnp
-import numpy as np
+from repro import sfu
+from repro.sfu import TABLE_DIR  # noqa: F401  (legacy import location)
 
-from . import functions as F
 from . import pwl
 
-TABLE_DIR = pathlib.Path(__file__).parent / "tables"
-
-# activation impls a model config may request.  "pwl_fused" evaluates PWL
-# activations as epilogues inside the producer kernels (kernels/fused/) at
-# the layer level; elementwise call sites under that mode fall back to the
-# unfused pure-jnp PWL evaluation.
-MODES = ("exact", "pwl", "pwl_kernel", "pwl_fused")
+# legacy mode strings, still accepted by CLIs (--act-impl) and old configs
+MODES = tuple(sfu.LEGACY_IMPL)
 
 
-@functools.lru_cache(maxsize=None)
-def get_table(name: str, n_breakpoints: int = 32) -> pwl.PWLTable:
-    """Fitted non-uniform table from the artifact cache (uniform fallback).
-
-    Tables are cached as HOST (numpy) arrays: a device/jnp array created while
-    a jit trace is active would leak a tracer through the lru_cache into later
-    traces.  jnp ops consume numpy operands as fresh constants per trace."""
-    path = TABLE_DIR / f"{name}_{n_breakpoints}bp.npz"
-    spec = F.get(name)
-    if path.exists():
-        data = np.load(path)
-        return pwl.PWLTable(
-            bp=np.asarray(data["bp"], np.float32),
-            m=np.asarray(data["m"], np.float32),
-            q=np.asarray(data["q"], np.float32),
-            name=name,
-        )
+def _warn(old: str, new: str):
     warnings.warn(
-        f"no fitted PWL table at {path}; using uniform-breakpoint fallback "
-        "(run `python -m repro.core.gen_tables` to generate fitted tables)"
-    )
-    t = pwl.make_uniform_table(spec, n_breakpoints)
-    return pwl.PWLTable(
-        bp=np.asarray(t.bp), m=np.asarray(t.m), q=np.asarray(t.q), name=name
+        f"repro.core.registry.{old} is deprecated; use {new} (repro.sfu)",
+        DeprecationWarning,
+        stacklevel=3,
     )
 
 
-def _resolve_site(cfg, name: str, site: str = "") -> tuple[bool, int]:
-    """Shared (exempt, n_breakpoints) resolution for a (config, site, fn).
-
-    ``cfg.pwl_exempt`` may name a function ("silu") or a site-qualified
-    function ("ssm:silu") to keep exact.  ``cfg.pwl_breakpoint_overrides``
-    ((key, n_bp) pairs, same keys) deepens specific sites — e.g. 64-bp SiLU
-    inside SSM blocks where the recurrence integrates activation error
-    (EXPERIMENTS.md "SSM sensitivity")."""
-    exempt = getattr(cfg, "pwl_exempt", ())
-    if name in exempt or (site and f"{site}:{name}" in exempt):
-        return True, cfg.act_breakpoints
-    n_bp = cfg.act_breakpoints
-    for key, bp in getattr(cfg, "pwl_breakpoint_overrides", ()):
-        if key == name or (site and key == f"{site}:{name}"):
-            n_bp = bp
-    return False, n_bp
+def get_table(name: str, n_breakpoints: int = 32) -> pwl.PWLTable:
+    """Deprecated: fitted f32 table from the default TableStore."""
+    _warn("get_table", "get_store().get(fn=..., n_breakpoints=...)")
+    return sfu.get_store().get(fn=name, n_breakpoints=n_breakpoints)
 
 
-def resolve_for(cfg, name: str, site: str = "") -> Callable:
-    """Resolve an activation through a ModelConfig (see :func:`_resolve_site`
-    for the exemption/override semantics)."""
-    is_exempt, n_bp = _resolve_site(cfg, name, site)
-    if is_exempt:
-        return resolve("exact", name, n_bp)
-    return resolve(cfg.act_impl, name, n_bp)
-
-
-def fused_table_for(cfg, name: str, site: str = "") -> "pwl.PWLTable | None":
-    """Table for the fused-epilogue path, or None when the layer should use
-    the unfused path (mode is not "pwl_fused", or this site is exempt).
-
-    Shares :func:`_resolve_site` with resolve_for so a layer asking "should
-    I dispatch the fused kernel here, and with which table?" can never
-    diverge from the unfused fallback's resolution."""
-    if getattr(cfg, "act_impl", "exact") != "pwl_fused":
-        return None
-    is_exempt, n_bp = _resolve_site(cfg, name, site)
-    if is_exempt:
-        return None
-    return get_table(name, n_bp)
+def _legacy_spec(mode: str, name: str, n_breakpoints: int) -> sfu.ApproxSpec:
+    if mode not in sfu.LEGACY_IMPL:
+        raise ValueError(f"unknown activation mode '{mode}'; expected one of {MODES}")
+    impl = sfu.LEGACY_IMPL[mode]
+    # elementwise resolution of "pwl_fused" is the unfused jnp fallback —
+    # ApproxSpec(impl="fused") carries the same semantics in resolve_spec
+    return sfu.ApproxSpec(fn=name, n_segments=n_breakpoints + 1, impl=impl)
 
 
 def resolve(mode: str, name: str, n_breakpoints: int = 32) -> Callable:
-    """Return the activation callable for (mode, function, #breakpoints)."""
-    spec = F.get(name)
-    if mode == "exact":
-        return spec.fn
-    if mode in ("pwl", "pwl_fused"):
-        # "pwl_fused" reaches here only for call sites no fused kernel
-        # covers (MoE experts, SSM gates, softmax exp): same table, unfused.
-        table = get_table(name, n_breakpoints)
+    """Deprecated: activation callable for (mode, function, #breakpoints)."""
+    _warn("resolve", "resolve_spec(ApproxSpec(...))")
+    return sfu.resolve_spec(_legacy_spec(mode, name, n_breakpoints))
 
-        def pwl_act(x, _table=table):
-            return pwl.eval_coeff(x, _table)
 
-        return pwl_act
-    if mode == "pwl_kernel":
-        from repro.kernels import ops as kops
+def _plan_site_key(cfg, name: str, site: str) -> str:
+    """Map a legacy (name, site) call onto the plan's site vocabulary."""
+    if site == "ssm":
+        return sfu.site_key(sfu.SITE_SSM, name)
+    # legacy site="" covered both dense-MLP and MoE-expert call sites; the
+    # plan distinguishes them, but their resolution from legacy knobs is
+    # identical — prefer whichever site the plan actually has.
+    for key in (sfu.site_key(sfu.SITE_MLP, name), sfu.site_key(sfu.SITE_MOE, name)):
+        if key in sfu.plan_for(cfg):
+            return key
+    return sfu.site_key(sfu.SITE_MLP, name)
 
-        table = get_table(name, n_breakpoints)
 
-        def pwl_kernel_act(x, _table=table):
-            return kops.pwl_activation(x, _table)
+def _spec_for(cfg, name: str, site: str) -> sfu.ApproxSpec:
+    """Plan-site spec for a legacy (cfg, name, site) call.  Falls back to
+    the same per-site translation compile_plan applies when the name is not
+    one of the config's architectural sites (ad-hoc use — legacy resolve_for
+    accepted any function name)."""
+    spec = sfu.plan_for(cfg).get(_plan_site_key(cfg, name, site))
+    if spec is None:
+        site_name = sfu.SITE_SSM if site == "ssm" else sfu.SITE_MLP
+        spec = sfu.plan._site_spec(
+            cfg, site_name, name, getattr(cfg, "act_table_dtype", "f32")
+        )
+    return spec
 
-        return pwl_kernel_act
-    raise ValueError(f"unknown activation mode '{mode}'; expected one of {MODES}")
+
+def resolve_for(cfg, name: str, site: str = "") -> Callable:
+    """Deprecated: resolve an activation through a ModelConfig's legacy
+    knobs.  Exactly ``plan_for(cfg).act(<site key>)``."""
+    _warn("resolve_for", "plan_for(cfg).act(site_key)")
+    return sfu.resolve_spec(_spec_for(cfg, name, site))
+
+
+def fused_table_for(cfg, name: str, site: str = "") -> "pwl.PWLTable | None":
+    """Deprecated: table for the fused-epilogue path, or None for the
+    unfused fallback.  Exactly ``plan_for(cfg).fused_table(<site key>)``."""
+    _warn("fused_table_for", "plan_for(cfg).fused_table(site_key)")
+    spec = _spec_for(cfg, name, site)
+    if spec.impl != "fused":
+        return None
+    return sfu.get_store().get(spec)

@@ -10,9 +10,11 @@ kernel that produced the pre-activation.  This package provides:
   glu       — fused  y = act(x @ Wg) * (x @ Wu) (the GLU-MLP hot path)
   norm      — fused RMSNorm (+ optional activation epilogue)
 
-Models opt in via ``ModelConfig.act_impl = "pwl_fused"`` (see
-core/registry.py and models/layers.py); non-fusable sites fall back to the
-unfused PWL path automatically.
+Models opt in through their activation plan: sites compiled with
+``ApproxSpec(impl="fused")`` — e.g. via the legacy knob
+``ModelConfig.act_impl = "pwl_fused"`` — dispatch here from
+``models/layers._fused_mlp_hidden``; non-fusable sites fall back to the
+unfused PWL path automatically (see repro.sfu).
 """
 from .epilogue import (  # noqa: F401
     IDENTITY,
@@ -22,6 +24,7 @@ from .epilogue import (  # noqa: F401
     plan_and_operands,
     pwl_eval_tile,
     pwl_value_and_slope_tile,
+    table_dtype_name,
 )
 from .glu import fused_glu  # noqa: F401
 from .linear import fused_linear  # noqa: F401

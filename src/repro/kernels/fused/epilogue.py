@@ -55,17 +55,39 @@ def pwl_eval_tile(x, bp_ref, dmq_ref, n_bp: int):
     return pwl_value_and_slope_tile(x, bp_ref, dmq_ref, n_bp)[0]
 
 
-def pack_table(table: PWLTable):
-    """Pack (bp, m, q) into the delta layout the tile function consumes."""
+def table_dtype_name(table: PWLTable) -> str:
+    """Storage-format tag ("f32" | "bf16" | "f16") of a table's arrays."""
     import numpy as np
 
-    m = np.asarray(table.m, np.float32)
-    q = np.asarray(table.q, np.float32)
+    return {
+        np.dtype(jnp.bfloat16): "bf16",
+        np.dtype(jnp.float16): "f16",
+    }.get(np.asarray(table.m).dtype, "f32")
+
+
+def pack_table(table: PWLTable, dtype: str | None = None):
+    """Pack (bp, m, q) into the delta layout the tile function consumes.
+
+    ``dtype`` ("f32" | "bf16" | "f16", default: the table's own storage
+    format) is the multi-format axis (paper Sec. III): coefficients are
+    quantized to that format, then upcast to f32 *operands* — the format
+    error lives in the table values while the tile decode keeps full-rate
+    f32 compares/FMAs, mirroring the ASIC's wide MADD accumulator reading
+    narrow table memories.
+    """
+    import numpy as np
+
+    if dtype is not None and dtype != "f32":
+        from repro.sfu import quantize_table
+
+        table = quantize_table(table, dtype)
+    m = np.asarray(table.m).astype(np.float32)
+    q = np.asarray(table.q).astype(np.float32)
     dmq = np.empty((m.shape[0], 2), np.float32)
     dmq[0, 0], dmq[0, 1] = m[0], q[0]
     dmq[1:, 0] = np.diff(m)
     dmq[1:, 1] = np.diff(q)
-    bp = np.asarray(table.bp, np.float32).reshape(-1, 1)
+    bp = np.asarray(table.bp).astype(np.float32).reshape(-1, 1)
     return jnp.asarray(bp), jnp.asarray(dmq)
 
 
@@ -75,10 +97,15 @@ class EpiloguePlan:
 
     kind: "identity" | "exact:<fn-name>" | "pwl"
     n_bp: breakpoint count (pwl only; fixes the static unroll depth).
+    table_dtype: storage format the table operands were quantized to
+        ("f32" | "bf16" | "f16") — recorded so the jit cache and run
+        manifests distinguish formats; the operands themselves arrive
+        already quantized (see :func:`pack_table`).
     """
 
     kind: str = "identity"
     n_bp: int = 0
+    table_dtype: str = "f32"
 
     def table_specs(self):
         """(rows, cols) shapes of the table operands this plan consumes."""
@@ -143,7 +170,10 @@ def plan_and_operands(table: PWLTable | None, act: str | None = None):
         raise ValueError("pass either table= (PWL epilogue) or act= (exact), not both")
     if table is not None:
         bp, dmq = pack_table(table)
-        return EpiloguePlan("pwl", int(bp.shape[0])), (bp, dmq)
+        return (
+            EpiloguePlan("pwl", int(bp.shape[0]), table_dtype_name(table)),
+            (bp, dmq),
+        )
     if act is not None:
         return exact_plan(act), ()
     return IDENTITY, ()

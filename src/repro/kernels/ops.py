@@ -18,9 +18,13 @@ from ._backend import should_interpret as _should_interpret
 from .fused import epilogue as fused_epilogue
 
 
-def pack_nonuniform(table: PWLTable):
-    """Pack (bp, m, q) into the kernel's delta layout: (bp (n,1), dmq)."""
-    return fused_epilogue.pack_table(table)
+def pack_nonuniform(table: PWLTable, dtype: str | None = None):
+    """Pack (bp, m, q) into the kernel's delta layout: (bp (n,1), dmq).
+
+    ``dtype`` optionally quantizes the coefficients to a narrower storage
+    format ("bf16" | "f16") before packing (see fused/epilogue.pack_table).
+    """
+    return fused_epilogue.pack_table(table, dtype)
 
 
 def pack_uniform(m, q):
@@ -58,13 +62,18 @@ def pwl_activation(
     x: jax.Array,
     table: PWLTable,
     *,
+    table_dtype: str | None = None,
     block=pwl_act.DEFAULT_BLOCK,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Non-uniform PWL activation via the Pallas kernel (any shape/dtype)."""
+    """Non-uniform PWL activation via the Pallas kernel (any shape/dtype).
+
+    ``table_dtype`` selects the table storage format ("f32" | "bf16" |
+    "f16"); a table already quantized by the TableStore needs no flag —
+    its values are packed as-is."""
     if interpret is None:
         interpret = _should_interpret()
-    bp, dmq = pack_nonuniform(table)
+    bp, dmq = pack_nonuniform(table, table_dtype)
     return _pwl_nonuniform_any(x, bp, dmq, block, interpret)
 
 

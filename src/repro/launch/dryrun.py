@@ -31,6 +31,7 @@ import traceback
 
 import jax
 
+from repro import sfu
 from repro.configs import ARCH_IDS, get_config
 from repro.core import registry
 from repro.launch.mesh import make_production_mesh
@@ -222,6 +223,10 @@ def run_cell(arch: str, shape: str, multi_pod: bool, act_impl: str = "pwl",
         shape=shape,
         mesh="2x16x16" if multi_pod else "16x16",
         act_impl=act_impl,
+        # exact per-site approximation plan this cell compiled with — a later
+        # run can reproduce it via ActivationPlan.from_json (repro.sfu)
+        act_plan=sfu.plan_for(cfg).to_json(),
+        act_plan_fingerprint=sfu.plan_for(cfg).fingerprint,
         status="ok",
         t_lower_s=round(t_lower, 1),
         t_compile_s=round(t_compile, 1),

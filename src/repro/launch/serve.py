@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sfu
 from repro.configs import get_config, get_reduced_config
 from repro.core import registry
 from repro.models import Model
@@ -44,10 +45,25 @@ def serve(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--act-impl", default="pwl", choices=list(registry.MODES))
+    ap.add_argument(
+        "--plan", default=None, metavar="PATH",
+        help="load an ActivationPlan JSON (repro.sfu) — overrides --act-impl",
+    )
+    ap.add_argument(
+        "--dump-plan", default=None, metavar="PATH",
+        help="write the exact activation plan this run uses as JSON",
+    )
     args = ap.parse_args(argv)
 
     getter = get_reduced_config if args.reduced else get_config
     cfg = getter(args.arch, act_impl=args.act_impl)
+    if args.plan:
+        cfg = getter(args.arch, act_plan=sfu.load_plan(args.plan))
+    plan = sfu.plan_for(cfg)
+    print(f"[serve] activation plan {plan.fingerprint}: "
+          f"{ {k: s.impl for k, s in plan.items()} }")
+    if args.dump_plan:
+        print(f"[serve] plan -> {sfu.dump_plan(plan, args.dump_plan)}")
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     prompts = jax.random.randint(

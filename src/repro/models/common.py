@@ -40,7 +40,8 @@ class ModelConfig:
     d_ff: int
     vocab_size: int
     head_dim: Optional[int] = None
-    # nonlinearities (resolved through repro.core.registry — the paper's knob)
+    # nonlinearities (compiled into a repro.sfu.ActivationPlan — the paper's
+    # knob; see sfu.compile_plan for the legacy-knob translation)
     activation: str = "silu"
     mlp_type: str = "swiglu"          # swiglu | geglu | mlp
     norm_type: str = "rmsnorm"        # rmsnorm | layernorm | nonparam_ln
@@ -55,6 +56,13 @@ class ModelConfig:
     # ((key, n_bp), ...) site-or-function-keyed table-depth overrides
     pwl_breakpoint_overrides: tuple = ()
     pwl_softmax: bool = False         # PWL-exp softmax (paper Sec. V-B)
+    # PWL table storage format ("f32" | "bf16" | "f16"): the paper's
+    # multi-format tables (Sec. III); applies to every site compile_plan emits
+    act_table_dtype: str = "f32"
+    # explicit repro.sfu.ActivationPlan — when set it IS the activation
+    # resolution (the legacy act_impl/pwl_* knobs above are ignored);
+    # when None, sfu.plan_for(cfg) translates the legacy knobs.
+    act_plan: Any = None
     # attention pattern
     sliding_window: Optional[int] = None
     global_every: Optional[int] = None   # gemma3: 1 global per N layers

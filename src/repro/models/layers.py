@@ -1,7 +1,9 @@
 """Shared model layers: norms, RoPE, flash-style attention, GLU MLPs.
 
-Every nonlinearity resolves through ``repro.core.registry`` so one config knob
-swaps exact <-> PWL (Flex-SFU) implementations across the whole zoo.
+Every nonlinearity resolves through a compiled ``repro.sfu.ActivationPlan``
+(threaded in by the model composition; ``sfu.plan_for(cfg)`` when absent) so
+one plan swaps exact <-> PWL (Flex-SFU) implementations, table depth, and
+table dtype across the whole zoo.
 
 Attention is a pure-JAX flash formulation (two-level lax.scan with online
 softmax in f32): peak memory is O(q_chunk * kv_chunk) per head instead of
@@ -18,7 +20,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import registry
+from repro import sfu
 from repro.distributed.sharding import constrain
 
 from .common import ModelConfig
@@ -92,14 +94,17 @@ def sinusoidal_positions(seq_len: int, d_model: int):
 # softmax exp resolution (paper Sec. V-B: PWL exp for softmax)
 
 
-def resolve_exp(cfg: ModelConfig) -> Callable:
-    if cfg.pwl_softmax and cfg.act_impl != "exact":
-        table = registry.get_table("exp", cfg.act_breakpoints)
+def resolve_exp(cfg: ModelConfig, plan=None) -> Callable:
+    plan = plan if plan is not None else sfu.plan_for(cfg)
+    spec = plan.get(sfu.site_key(sfu.SITE_SOFTMAX, "exp"))
+    if spec is not None and not spec.is_exact:
+        # resolve_spec honors the spec's impl (jnp / kernel / fused-fallback);
+        # the clamp keeps the PWL approximation of exp non-negative so the
+        # softmax normalizer stays positive
+        raw = sfu.resolve_spec(spec)
 
         def pwl_exp(x):
-            from repro.core.pwl import eval_coeff
-
-            return jnp.maximum(eval_coeff(x, table), 0.0)
+            return jnp.maximum(raw(x), 0.0)
 
         return pwl_exp
     return jnp.exp
@@ -389,22 +394,27 @@ def _flash_or_sliced(cfg, q, k, v, *, causal, window, exp_fn):
 # MLPs
 
 
-def _fused_mlp_hidden(cfg: ModelConfig, params, x):
-    """Fused-kernel hidden state for act_impl="pwl_fused": the PWL activation
-    runs as an epilogue inside the gemm that produced it (kernels/fused/), so
-    the (tokens, d_ff) pre-activation never round-trips HBM.  Returns None
-    when this site must fall back to the unfused path: exempt activation, or
-    a multi-device mesh is active (GSPMD cannot partition a pallas_call, so
-    the fused kernel would force replicated compute/traffic the unfused
-    path's sharding constraints exist to avoid — per-shard fused dispatch
-    via shard_map is a ROADMAP item)."""
+def _fused_mlp_hidden(cfg: ModelConfig, params, x, plan):
+    """Fused-kernel hidden state for plan sites with ``impl="fused"``: the
+    PWL activation runs as an epilogue inside the gemm that produced it
+    (kernels/fused/), so the (tokens, d_ff) pre-activation never round-trips
+    HBM.  Returns None when this site must fall back to the unfused path:
+    site not planned fused (exempt / other impl), or a multi-device mesh is
+    active (GSPMD cannot partition a pallas_call, so the fused kernel would
+    force replicated compute/traffic the unfused path's sharding constraints
+    exist to avoid — per-shard fused dispatch via shard_map is a ROADMAP
+    item)."""
+    key = sfu.site_key(sfu.SITE_MLP, cfg.activation)
+    spec = plan.get(key)
+    if spec is None or spec.impl != "fused":
+        return None
     from repro.distributed.sharding import _ACTIVE
     from repro.kernels import fused
 
     rules = _ACTIVE.get()
     if rules is not None and rules.mesh is not None and rules.mesh.size > 1:
         return None
-    table = registry.fused_table_for(cfg, cfg.activation)
+    table = plan.fused_table(key)
     if table is None:
         return None
     dtype = x.dtype
@@ -420,14 +430,18 @@ def _fused_mlp_hidden(cfg: ModelConfig, params, x):
     )
 
 
-def mlp(cfg: ModelConfig, params, x):
-    """Dense FFN: swiglu / geglu / plain, activation via the PWL registry.
+def mlp(cfg: ModelConfig, params, x, plan=None):
+    """Dense FFN: swiglu / geglu / plain, activation via the activation plan
+    (site ``"mlp:<activation>"``).
 
-    Under act_impl="pwl_fused" the hidden state comes from the fused Pallas
-    kernels; the down-projection tail below is shared with the unfused path.
+    For sites planned ``impl="fused"`` the hidden state comes from the fused
+    Pallas kernels; the down-projection tail below is shared with the
+    unfused path.
     """
     dtype = x.dtype
-    h = _fused_mlp_hidden(cfg, params, x) if cfg.act_impl == "pwl_fused" else None
+    plan = plan if plan is not None else sfu.plan_for(cfg)
+    key = sfu.site_key(sfu.SITE_MLP, cfg.activation)
+    h = _fused_mlp_hidden(cfg, params, x, plan)
     # Megatron-style sequence parallelism: inside the TP region the hidden is
     # sharded on d_ff ONLY (seq replicated) — one all-gather in, one
     # reduce-scatter out per layer.  Constraining seq@model here too would
@@ -436,14 +450,14 @@ def mlp(cfg: ModelConfig, params, x):
     if h is not None:
         h = constrain(h, "batch", None, "mlp")
     elif cfg.mlp_type in ("swiglu", "geglu"):
-        act = registry.resolve_for(cfg, cfg.activation)
+        act = plan.act(key)
         g = x @ params["w_gate"].astype(dtype)
         u = x @ params["w_up"].astype(dtype)
         g = constrain(g, "batch", None, "mlp")
         u = constrain(u, "batch", None, "mlp")
         h = act(g) * u
     else:
-        act = registry.resolve_for(cfg, cfg.activation)
+        act = plan.act(key)
         h = x @ params["w_in"].astype(dtype)
         if "b_in" in params:
             h = h + params["b_in"].astype(dtype)
@@ -470,13 +484,14 @@ def attention_layer(
     cache_pos=None,            # scalar int — write offset for decode
     cross_kv=None,             # (k, v) for cross-attention (whisper)
     use_rope: bool = True,
+    plan=None,                 # repro.sfu.ActivationPlan (softmax-exp site)
 ):
     """Returns (y, new_cache).  Train/prefill when cache is None or a fresh
     buffer being filled; decode when x has seq_len 1 and cache is given."""
     B, S, D = x.shape
     H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     dtype = x.dtype
-    exp_fn = resolve_exp(cfg)
+    exp_fn = resolve_exp(cfg, plan)
     window = cfg.sliding_window if kind == "attn_local" else None
 
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))

@@ -47,6 +47,13 @@ class Model:
         self.cfg = cfg
         self._impl = encdec if cfg.is_encoder_decoder else transformer
 
+    @property
+    def plan(self):
+        """The compiled activation plan this model executes (repro.sfu)."""
+        from repro import sfu
+
+        return sfu.plan_for(self.cfg)
+
     # -- parameters --------------------------------------------------------
     def param_defs(self):
         if self.cfg.is_encoder_decoder:

@@ -31,26 +31,30 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.core import registry
+from repro import sfu
 from repro.distributed.sharding import _ACTIVE, constrain
 
 from .common import ModelConfig
 
 
-def moe_layer(cfg: ModelConfig, params, x):
+def moe_layer(cfg: ModelConfig, params, x, plan=None):
     """x: (B, S, D) -> (y: (B, S, D), aux_loss: scalar f32).
 
-    Chooses the shard_map expert-parallel path when an active Rules context
-    provides a mesh with a non-trivial "model" axis and E divides it."""
+    The expert activation resolves through the activation plan (site
+    ``"moe.expert:<activation>"``).  Chooses the shard_map expert-parallel
+    path when an active Rules context provides a mesh with a non-trivial
+    "model" axis and E divides it."""
+    plan = plan if plan is not None else sfu.plan_for(cfg)
+    act = plan.act(sfu.site_key(sfu.SITE_MOE, cfg.activation))
     rules = _ACTIVE.get()
     if rules is not None and rules.mesh is not None:
         tp = dict(rules.mesh.shape).get("model", 1)
         if tp > 1 and cfg.n_experts % tp == 0:
-            return _moe_layer_shardmap(cfg, params, x, rules)
-    return _moe_layer_local(cfg, params, x)
+            return _moe_layer_shardmap(cfg, params, x, rules, act)
+    return _moe_layer_local(cfg, params, x, act)
 
 
-def _moe_layer_shardmap(cfg: ModelConfig, params, x, rules):
+def _moe_layer_shardmap(cfg: ModelConfig, params, x, rules, act):
     """Expert-parallel MoE: local dispatch + explicit all_to_all (Perf H-MoE)."""
     mesh = rules.mesh
     axes = mesh.axis_names
@@ -77,7 +81,8 @@ def _moe_layer_shardmap(cfg: ModelConfig, params, x, rules):
     )
     def run(x_loc, p_loc):
         y, aux = _moe_local_dispatch(
-            cfg, p_loc, x_loc, ep_axis="model", ep_size=dict(mesh.shape)["model"]
+            cfg, p_loc, x_loc, act,
+            ep_axis="model", ep_size=dict(mesh.shape)["model"],
         )
         for a in batch_axes:
             aux = jax.lax.pmean(aux, a)
@@ -86,12 +91,12 @@ def _moe_layer_shardmap(cfg: ModelConfig, params, x, rules):
     return run(x, {k: params[k] for k in pspecs})
 
 
-def _moe_layer_local(cfg: ModelConfig, params, x):
-    y, aux = _moe_local_dispatch(cfg, params, x, ep_axis=None)
+def _moe_layer_local(cfg: ModelConfig, params, x, act):
+    y, aux = _moe_local_dispatch(cfg, params, x, act, ep_axis=None)
     return y, aux
 
 
-def _moe_local_dispatch(cfg: ModelConfig, params, x, ep_axis, ep_size: int = 1):
+def _moe_local_dispatch(cfg: ModelConfig, params, x, act, ep_axis, ep_size: int = 1):
     """Token-choice dispatch on the LOCAL token shard.  With ep_axis set, the
     expert dim is distributed over that mesh axis via all_to_all."""
     B, S, D = x.shape
@@ -138,7 +143,6 @@ def _moe_local_dispatch(cfg: ModelConfig, params, x, ep_axis, ep_size: int = 1):
     buf = buf.at[local_e, safe_pos].add(contrib, mode="drop")
 
     # --- expert FFN on local experts ---
-    act = registry.resolve_for(cfg, cfg.activation)
     g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(dtype))
     u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(dtype))
     h = act(g) * u

@@ -11,15 +11,15 @@ quadratic term + inter-chunk state recurrence), which maps onto the MXU as
 dense matmuls — this is the TPU-friendly form (no sequential scan over L).
 
 The paper's technique applies here too: the block is activation-rich — SiLU on
-the conv branch and gate, softplus on dt — all resolved through the PWL
-registry (DESIGN.md Sec. 5).
+the conv branch and gate, softplus on dt — all resolved through the compiled
+activation plan's ``"ssm:*"`` sites (repro.sfu; DESIGN.md Sec. 5).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import registry
+from repro import sfu
 from repro.distributed.sharding import constrain
 
 from .common import ModelConfig
@@ -126,18 +126,20 @@ def ssd_chunked(xdt, a, Bmat, Cmat, chunk, h_init=None):
     return y, h_last
 
 
-def mamba2_layer(cfg: ModelConfig, params, x, cache=None):
+def mamba2_layer(cfg: ModelConfig, params, x, cache=None, plan=None):
     """Mamba2 block.  x: (B, L, D).  Returns (y, new_cache).
 
     cache (decode): {"conv": (B, K-1, C), "ssm": (B, H, P, N)} — exact
-    single-step recurrence when L == 1 and cache is not None.
+    single-step recurrence when L == 1 and cache is not None.  SiLU and
+    softplus resolve through the activation plan's ``"ssm:*"`` sites.
     """
     B, L, D = x.shape
     d_inner, n_heads, d_state, conv_ch, _ = ssm_dims(cfg)
     P = cfg.ssm_head_dim
     dtype = x.dtype
-    silu = registry.resolve_for(cfg, "silu", site="ssm")
-    softplus = registry.resolve_for(cfg, "softplus", site="ssm")
+    plan = plan if plan is not None else sfu.plan_for(cfg)
+    silu = plan.act(sfu.site_key(sfu.SITE_SSM, "silu"))
+    softplus = plan.act(sfu.site_key(sfu.SITE_SSM, "softplus"))
 
     z = x @ params["in_z"].astype(dtype)               # (B, L, d_inner)
     x_in = x @ params["in_x"].astype(dtype)            # (B, L, d_inner)

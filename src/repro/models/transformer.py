@@ -23,6 +23,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import sfu
 from repro.distributed.sharding import constrain
 
 from . import layers as L
@@ -145,21 +146,27 @@ def model_defs(cfg: ModelConfig):
 # blocks
 
 
-def block_apply(cfg: ModelConfig, p, h, mixer: str, ffn: str, cache=None, pos=None):
-    """Pre-norm residual block.  Returns (h, new_cache, aux_loss)."""
+def block_apply(cfg: ModelConfig, p, h, mixer: str, ffn: str, cache=None,
+                pos=None, plan=None):
+    """Pre-norm residual block.  Returns (h, new_cache, aux_loss).
+
+    ``plan`` is the compiled activation plan threaded down from the forward
+    entry points (one ``sfu.plan_for`` per trace, not per layer)."""
+    plan = plan if plan is not None else sfu.plan_for(cfg)
     hn = L.apply_norm(cfg, p["ln1"], h)
     if mixer == "ssm":
-        y, new_cache = SSM.mamba2_layer(cfg, p["mixer"], hn, cache)
+        y, new_cache = SSM.mamba2_layer(cfg, p["mixer"], hn, cache, plan=plan)
     else:
         y, new_cache = L.attention_layer(
-            cfg, p["mixer"], hn, kind=mixer, cache=cache, cache_pos=pos
+            cfg, p["mixer"], hn, kind=mixer, cache=cache, cache_pos=pos,
+            plan=plan,
         )
     h = h + y
     hn2 = L.apply_norm(cfg, p["ln2"], h)
     if ffn == "moe":
-        y2, aux = MOE.moe_layer(cfg, p["ffn"], hn2)
+        y2, aux = MOE.moe_layer(cfg, p["ffn"], hn2, plan=plan)
     else:
-        y2, aux = L.mlp(cfg, p["ffn"], hn2), jnp.float32(0.0)
+        y2, aux = L.mlp(cfg, p["ffn"], hn2, plan=plan), jnp.float32(0.0)
     return h + y2, new_cache, aux
 
 
@@ -200,12 +207,13 @@ def forward(cfg: ModelConfig, params, tokens, vision_embeds=None):
     """Teacher-forcing forward -> (logits, aux_loss)."""
     kinds = cfg.layer_kinds
     period = cfg.period
+    plan = sfu.plan_for(cfg)
     h = embed_tokens(cfg, params, tokens, vision_embeds)
 
     def period_fn(carry, stacked):
         h, aux = carry
         for j in range(period):
-            h, _, a = block_apply(cfg, stacked[j], h, *kinds[j])
+            h, _, a = block_apply(cfg, stacked[j], h, *kinds[j], plan=plan)
             aux = aux + a
         return (h, aux), None
 
@@ -303,13 +311,15 @@ def make_cache(cfg: ModelConfig, batch: int, max_len: int):
 def _scan_with_cache(cfg: ModelConfig, params, h, cache, pos):
     kinds = cfg.layer_kinds
     period = cfg.period
+    plan = sfu.plan_for(cfg)
 
     def period_fn(h, xs):
         stacked, cache_p = xs
         new_caches = []
         for j in range(period):
             h, nc, _ = block_apply(
-                cfg, stacked[j], h, *kinds[j], cache=cache_p[j], pos=pos
+                cfg, stacked[j], h, *kinds[j], cache=cache_p[j], pos=pos,
+                plan=plan,
             )
             new_caches.append(nc)
         return h, new_caches

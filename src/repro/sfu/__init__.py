@@ -1,0 +1,97 @@
+"""`repro.sfu` — the public activation-approximation API.
+
+One import gives the three layers of the Flex-SFU software analogue:
+
+  * :class:`ApproxSpec` — how one activation site is approximated
+    (function, segment count, table dtype ``f32|bf16|f16``, impl
+    ``exact|jnp|kernel|fused``, fit fingerprint);
+  * :class:`ActivationPlan` + :func:`compile_plan` — per-site plans compiled
+    once per model config and threaded through the model layers and fused
+    kernels; JSON-serializable (:func:`dump_plan` / :func:`load_plan`);
+  * :class:`TableStore` + :func:`get_store` — provenance-aware artifact
+    store keyed by (fn, n_breakpoints, dtype, fit), with fit-on-miss and
+    multi-format quantization.
+
+Quick tour::
+
+    from repro import sfu
+    from repro.configs import get_config
+
+    cfg = get_config("qwen2.5-32b", act_impl="pwl_fused")
+    plan = sfu.compile_plan(cfg)         # {"mlp:silu": ApproxSpec(...)}
+    sfu.dump_plan(plan, "plan.json")     # exact plan a run used
+    act = plan.act("mlp:silu")           # elementwise callable
+    table = sfu.get_store().get(plan.spec("mlp:silu"))   # PWLTable
+
+Migration from the deprecated ``repro.core.registry`` string knobs:
+
+  ======================================  =================================
+  old knob / call                         plan-API equivalent
+  ======================================  =================================
+  ``act_impl="pwl"``                      ``ApproxSpec(impl="jnp")``
+  ``act_impl="pwl_kernel"``               ``ApproxSpec(impl="kernel")``
+  ``act_impl="pwl_fused"``                ``ApproxSpec(impl="fused")``
+  ``act_breakpoints=32``                  ``ApproxSpec(n_segments=33)``
+  ``pwl_exempt=("ssm:silu",)``            site spec with ``impl="exact"``
+  ``pwl_breakpoint_overrides``            per-site ``n_segments``
+  (no equivalent)                         ``ApproxSpec(dtype="bf16")`` /
+                                          ``ModelConfig.act_table_dtype``
+  ``registry.resolve_for(cfg, fn, site)`` ``plan_for(cfg).act(key)``
+  ``registry.fused_table_for(cfg, fn)``   ``plan_for(cfg).fused_table(key)``
+  ``registry.get_table(fn, n)``           ``get_store().get(fn=fn, n_breakpoints=n)``
+  ======================================  =================================
+
+Legacy configs keep working: ``compile_plan`` translates the old knobs, and
+``repro.core.registry`` remains as a thin shim that emits
+``DeprecationWarning`` and delegates here.
+"""
+from .plan import (
+    SITE_MLP,
+    SITE_MOE,
+    SITE_SOFTMAX,
+    SITE_SSM,
+    ActivationPlan,
+    compile_plan,
+    dump_plan,
+    load_plan,
+    model_sites,
+    plan_for,
+    resolve_spec,
+    site_key,
+)
+from .spec import (
+    DEFAULT_FIT,
+    DTYPES,
+    FIT_SGD_V1,
+    FIT_UNIFORM,
+    IMPLS,
+    LEGACY_IMPL,
+    ApproxSpec,
+)
+from .store import TABLE_DIR, TableStore, get_store, quantize_table
+
+__all__ = [
+    "ApproxSpec",
+    "ActivationPlan",
+    "TableStore",
+    "compile_plan",
+    "plan_for",
+    "resolve_spec",
+    "model_sites",
+    "site_key",
+    "dump_plan",
+    "load_plan",
+    "get_store",
+    "quantize_table",
+    "DTYPES",
+    "IMPLS",
+    "LEGACY_IMPL",
+    "DEFAULT_FIT",
+    "FIT_SGD_V1",
+    "FIT_UNIFORM",
+    "TABLE_DIR",
+    "SITE_MLP",
+    "SITE_MOE",
+    "SITE_SSM",
+    "SITE_SOFTMAX",
+]

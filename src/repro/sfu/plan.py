@@ -1,0 +1,275 @@
+"""`ActivationPlan`: compiled per-site approximation plans.
+
+A plan maps *site keys* — ``"mlp:gelu"``, ``"ssm:silu"``,
+``"moe.expert:silu"``, ``"attn.softmax:exp"`` — to resolved
+:class:`~repro.sfu.spec.ApproxSpec` records.  It is compiled **once** per
+model config by :func:`compile_plan` and threaded explicitly through the
+model layers (``models/layers.py``, ``moe.py``, ``ssm.py``) and the fused
+kernels, replacing the old per-call-site ``registry.resolve_for`` /
+``fused_table_for`` string dispatch.
+
+Plans are frozen/hashable (safe as jit static arguments) and JSON-round-trip
+exactly, so a serving or dry-run job can dump the precise plan it executed
+and a later job can reload it (``dump_plan`` / ``load_plan``).
+
+Site vocabulary (one entry per *approximation context*, not per layer):
+
+  ``mlp``          dense FFN activation (fusable: GLU / linear epilogue)
+  ``moe.expert``   MoE expert FFN activation (expert einsum, unfused today)
+  ``ssm``          Mamba2 conv/gate SiLU and dt softplus
+  ``attn.softmax`` PWL-exp inside softmax (paper Sec. V-B)
+
+Legacy-knob translation (:func:`compile_plan` on a config that only sets
+``act_impl``/``act_breakpoints``/``pwl_exempt``/``pwl_breakpoint_overrides``)
+reproduces the historical resolution byte-for-byte: exemption and override
+keys match a bare function name (``"silu"``, every site) or a site-qualified
+name (``"ssm:silu"``); overrides apply last-match-wins; the softmax-exp site
+ignores ``pwl_exempt``/overrides exactly as ``layers.resolve_exp`` did.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import json
+import pathlib
+from typing import Callable, Iterator, Optional
+
+from repro.core import functions as F
+from repro.core import pwl
+
+from .spec import DEFAULT_FIT, LEGACY_IMPL, ApproxSpec
+from .store import TableStore, get_store
+
+PLAN_SCHEMA = 1
+
+# site-key prefixes
+SITE_MLP = "mlp"
+SITE_MOE = "moe.expert"
+SITE_SSM = "ssm"
+SITE_SOFTMAX = "attn.softmax"
+
+
+def site_key(site: str, fn: str) -> str:
+    return f"{site}:{fn}"
+
+
+@dataclasses.dataclass(frozen=True)
+class ActivationPlan:
+    """Ordered, frozen mapping of site keys to ApproxSpecs."""
+
+    sites: tuple[tuple[str, ApproxSpec], ...] = ()
+
+    # -- mapping interface ---------------------------------------------------
+    def __iter__(self) -> Iterator[str]:
+        return (k for k, _ in self.sites)
+
+    def __len__(self) -> int:
+        return len(self.sites)
+
+    def __contains__(self, key: str) -> bool:
+        return any(k == key for k, _ in self.sites)
+
+    def items(self) -> tuple[tuple[str, ApproxSpec], ...]:
+        return self.sites
+
+    def get(self, key: str, default: Optional[ApproxSpec] = None) -> Optional[ApproxSpec]:
+        for k, s in self.sites:
+            if k == key:
+                return s
+        return default
+
+    def spec(self, key: str) -> ApproxSpec:
+        s = self.get(key)
+        if s is None:
+            raise KeyError(
+                f"plan has no site '{key}'; sites: {[k for k, _ in self.sites]}"
+            )
+        return s
+
+    # -- resolution ----------------------------------------------------------
+    def act(self, key: str, store: Optional[TableStore] = None) -> Callable:
+        """Elementwise activation callable for a site (the plan analogue of
+        ``registry.resolve_for``).  ``impl="fused"`` sites resolve to the
+        unfused jnp evaluation — that is their elementwise *fallback*; the
+        fused dispatch itself goes through :meth:`fused_table`."""
+        return resolve_spec(self.spec(key), store)
+
+    def fused_table(self, key: str, store: Optional[TableStore] = None) -> Optional[pwl.PWLTable]:
+        """Table for the fused-epilogue path, or None when the producing
+        layer must use the unfused path (site absent, exempt, or not planned
+        for fused execution).  The single decision point a layer consults, so
+        fused dispatch and the unfused fallback can never diverge."""
+        s = self.get(key)
+        if s is None or s.impl != "fused":
+            return None
+        return (store or get_store()).get(s)
+
+    # -- identity / serialization -------------------------------------------
+    def to_json(self) -> dict:
+        return {
+            "schema": PLAN_SCHEMA,
+            "sites": [[k, s.to_json()] for k, s in self.sites],
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ActivationPlan":
+        return cls(
+            sites=tuple((k, ApproxSpec.from_json(s)) for k, s in d["sites"])
+        )
+
+    def dumps(self, indent: int = 2) -> str:
+        return json.dumps(self.to_json(), indent=indent)
+
+    @classmethod
+    def loads(cls, s: str) -> "ActivationPlan":
+        return cls.from_json(json.loads(s))
+
+    @property
+    def fingerprint(self) -> str:
+        """Stable short id of the exact plan (for run manifests / logs)."""
+        blob = json.dumps(self.to_json(), sort_keys=True).encode()
+        return hashlib.sha1(blob).hexdigest()[:12]
+
+
+def resolve_spec(spec: ApproxSpec, store: Optional[TableStore] = None) -> Callable:
+    """ApproxSpec -> elementwise callable (any shape/dtype input)."""
+    if spec.impl == "exact":
+        return F.get(spec.fn).fn
+    store = store or get_store()
+    table = store.get(spec)
+    if spec.impl == "kernel":
+        from repro.kernels import ops as kops
+
+        def pwl_kernel_act(x, _table=table):
+            return kops.pwl_activation(x, _table)
+
+        return pwl_kernel_act
+
+    # "jnp", and the elementwise fallback of "fused"
+    def pwl_act(x, _table=table):
+        return pwl.eval_coeff(x, _table)
+
+    return pwl_act
+
+
+# ---------------------------------------------------------------------------
+# compilation from a model config
+
+
+def model_sites(cfg) -> list[tuple[str, str]]:
+    """(site, fn) pairs a config's architecture actually instantiates."""
+    sites: list[tuple[str, str]] = []
+    if getattr(cfg, "is_encoder_decoder", False):
+        has_dense, has_moe, has_ssm = True, False, False
+    else:
+        kinds = cfg.layer_kinds
+        has_dense = any(f == "dense" for _, f in kinds)
+        has_moe = any(f == "moe" for _, f in kinds)
+        has_ssm = any(m == "ssm" for m, _ in kinds)
+    if has_dense:
+        sites.append((SITE_MLP, cfg.activation))
+    if has_moe:
+        sites.append((SITE_MOE, cfg.activation))
+    if has_ssm:
+        sites.append((SITE_SSM, "silu"))
+        sites.append((SITE_SSM, "softplus"))
+    if getattr(cfg, "pwl_softmax", False):
+        sites.append((SITE_SOFTMAX, "exp"))
+    return sites
+
+
+def _site_spec(cfg, site: str, fn: str, dtype: str) -> ApproxSpec:
+    """Resolve one (site, fn) through the legacy config knobs.
+
+    Match keys: the bare function name applies at every site (legacy
+    ``_resolve_site`` checked ``name in pwl_exempt`` regardless of site); a
+    site-qualified ``"<site>:<fn>"`` key applies only there.  ``"ssm:silu"``
+    is both the legacy and the new qualified spelling for SSM sites.
+    """
+    act_impl = getattr(cfg, "act_impl", "exact")
+    if act_impl not in LEGACY_IMPL:
+        raise ValueError(
+            f"unknown activation mode '{act_impl}'; expected one of "
+            f"{tuple(LEGACY_IMPL)}"
+        )
+    n_bp = cfg.act_breakpoints
+    if site == SITE_SOFTMAX:
+        # legacy resolve_exp: active iff pwl_softmax and mode != exact;
+        # always the jnp evaluation; never exempted or overridden.
+        impl = "exact" if act_impl == "exact" else "jnp"
+        return ApproxSpec(fn=fn, n_segments=n_bp + 1, dtype=dtype, impl=impl,
+                          fit=DEFAULT_FIT)
+
+    keys = (fn, site_key(site, fn))
+    exempt = any(k in getattr(cfg, "pwl_exempt", ()) for k in keys)
+    for key, bp in getattr(cfg, "pwl_breakpoint_overrides", ()):
+        if key in keys:
+            n_bp = bp
+    if exempt or act_impl == "exact":
+        impl = "exact"
+    elif act_impl == "pwl_fused":
+        # only the dense-MLP site has a fused producer kernel today; other
+        # sites run the unfused jnp evaluation (the plan records the
+        # fallback statically instead of re-deriving it per call)
+        impl = "fused" if site == SITE_MLP else "jnp"
+    else:
+        impl = LEGACY_IMPL[act_impl]
+    return ApproxSpec(fn=fn, n_segments=n_bp + 1, dtype=dtype, impl=impl,
+                      fit=DEFAULT_FIT)
+
+
+def compile_plan(cfg) -> ActivationPlan:
+    """Compile a ModelConfig's activation knobs into an ActivationPlan.
+
+    Accepts both legacy stringly-typed configs (``act_impl`` + exemption /
+    override tuples) and new-style configs that additionally set
+    ``act_table_dtype``.  A config carrying an explicit ``act_plan`` is
+    returned as-is — the plan is the source of truth.
+    """
+    explicit = getattr(cfg, "act_plan", None)
+    if explicit is not None:
+        return explicit
+    dtype = getattr(cfg, "act_table_dtype", "f32")
+    return ActivationPlan(
+        sites=tuple(
+            (site_key(site, fn), _site_spec(cfg, site, fn, dtype))
+            for site, fn in model_sites(cfg)
+        )
+    )
+
+
+@functools.lru_cache(maxsize=512)
+def _plan_for_cached(cfg) -> ActivationPlan:
+    return compile_plan(cfg)
+
+
+def plan_for(cfg) -> ActivationPlan:
+    """The plan a model built from `cfg` executes (compiled once per config).
+
+    ``cfg.act_plan`` (an explicit ActivationPlan) short-circuits compilation;
+    otherwise the legacy knobs are translated.  ModelConfig is a frozen
+    dataclass, so results memoize on the config value itself.
+    """
+    explicit = getattr(cfg, "act_plan", None)
+    if explicit is not None:
+        return explicit
+    try:
+        return _plan_for_cached(cfg)
+    except TypeError:  # unhashable config stand-in (tests, ad-hoc objects)
+        return compile_plan(cfg)
+
+
+# ---------------------------------------------------------------------------
+# persistence
+
+
+def dump_plan(plan: ActivationPlan, path) -> pathlib.Path:
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(plan.dumps() + "\n")
+    return path
+
+
+def load_plan(path) -> ActivationPlan:
+    return ActivationPlan.loads(pathlib.Path(path).read_text())

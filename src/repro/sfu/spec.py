@@ -1,0 +1,120 @@
+"""`ApproxSpec`: the atomic unit of the approximation-plan API.
+
+One frozen, hashable record answering every question a call site can ask
+about how to evaluate an activation function:
+
+  * ``fn``         — target function name (must exist in ``core.functions``);
+  * ``n_segments`` — PWL segment count (= breakpoints + 1, the paper's
+                     hardware-visible table size);
+  * ``dtype``      — table storage format, ``"f32" | "bf16" | "f16"``
+                     (paper Sec. III: the SFU re-targets multiple data
+                     formats; Flex-PE/FQA treat precision as a first-class
+                     axis of PWL approximation);
+  * ``impl``       — execution strategy:
+                     ``"exact"``  reference jnp transcendental,
+                     ``"jnp"``    pure-jnp PWL (`core.pwl.eval_coeff`),
+                     ``"kernel"`` standalone Pallas elementwise kernel,
+                     ``"fused"``  PWL as a producer-kernel epilogue
+                     (fused where a fused kernel covers the site, unfused
+                     jnp fallback elsewhere — the plan records *intent*);
+  * ``fit``        — fit fingerprint: which fitting pipeline produced the
+                     table artifact.  ``"sgd-v1"`` is the shipped SGD +
+                     remove/insert fit (``core/fit.py``, paper Sec. IV);
+                     ``"uniform"`` is the uniform-breakpoint prior-work
+                     baseline (no artifact, derived analytically).
+
+Being a frozen dataclass of plain strings/ints, an ``ApproxSpec`` (and any
+tuple of them) is hashable — safe as a ``jax.jit`` static argument — and
+round-trips losslessly through JSON.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import functions as F
+
+# table storage formats (paper Secs. III & V: multi-format tables)
+DTYPES = ("f32", "bf16", "f16")
+JNP_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16, "f16": jnp.float16}
+
+# execution strategies
+IMPLS = ("exact", "jnp", "kernel", "fused")
+
+# legacy ``ModelConfig.act_impl`` strings -> ApproxSpec.impl
+LEGACY_IMPL = {
+    "exact": "exact",
+    "pwl": "jnp",
+    "pwl_kernel": "kernel",
+    "pwl_fused": "fused",
+}
+IMPL_TO_LEGACY = {v: k for k, v in LEGACY_IMPL.items()}
+
+# fit fingerprints with reserved semantics
+FIT_SGD_V1 = "sgd-v1"      # shipped artifacts from core/fit.py (gen_tables)
+FIT_UNIFORM = "uniform"    # analytic uniform-breakpoint baseline, no artifact
+DEFAULT_FIT = FIT_SGD_V1
+
+
+@dataclasses.dataclass(frozen=True)
+class ApproxSpec:
+    """How one activation site is approximated.  Frozen + hashable."""
+
+    fn: str
+    n_segments: int = 33
+    dtype: str = "f32"
+    impl: str = "jnp"
+    fit: str = DEFAULT_FIT
+
+    def __post_init__(self):
+        F.get(self.fn)  # raises KeyError for unknown functions
+        if self.impl not in IMPLS:
+            raise ValueError(f"impl must be one of {IMPLS}, got '{self.impl}'")
+        if self.dtype not in DTYPES:
+            raise ValueError(f"dtype must be one of {DTYPES}, got '{self.dtype}'")
+        if self.n_segments < 3:
+            raise ValueError(f"n_segments must be >= 3, got {self.n_segments}")
+
+    # -- derived views -------------------------------------------------------
+    @property
+    def n_breakpoints(self) -> int:
+        """Breakpoint count (legacy ``act_breakpoints`` unit): segments - 1."""
+        return self.n_segments - 1
+
+    @property
+    def is_exact(self) -> bool:
+        return self.impl == "exact"
+
+    @property
+    def jnp_dtype(self):
+        return JNP_DTYPES[self.dtype]
+
+    @property
+    def table_key(self) -> tuple[str, int, str, str]:
+        """TableStore cache key: (fn, n_breakpoints, dtype, fit)."""
+        return (self.fn, self.n_breakpoints, self.dtype, self.fit)
+
+    # -- (de)serialization ---------------------------------------------------
+    def to_json(self) -> dict:
+        return {
+            "fn": self.fn,
+            "n_segments": self.n_segments,
+            "dtype": self.dtype,
+            "impl": self.impl,
+            "fit": self.fit,
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ApproxSpec":
+        return cls(
+            fn=d["fn"],
+            n_segments=int(d["n_segments"]),
+            dtype=d.get("dtype", "f32"),
+            impl=d.get("impl", "jnp"),
+            fit=d.get("fit", DEFAULT_FIT),
+        )
+
+    def exact(self) -> "ApproxSpec":
+        """Copy of this spec with the exact (non-approximated) impl."""
+        return dataclasses.replace(self, impl="exact")

@@ -1,0 +1,260 @@
+"""`TableStore`: provenance-aware PWL table artifacts, keyed by
+(fn, n_breakpoints, dtype, fit fingerprint).
+
+Replaces the old ``registry.get_table`` ``lru_cache`` + path convention,
+fixing two long-standing defects:
+
+  * **stale-fallback pinning** — the lru_cache permanently pinned the
+    uniform-breakpoint *fallback* table even after ``gen_tables`` wrote a
+    fitted artifact; the store records which cache entries are fallbacks and
+    re-checks the artifact path on every request until the real table shows
+    up (then upgrades in place);
+  * **per-key warning spam** — the missing-artifact warning fired once per
+    (name, n_bp) pair; the store warns once overall.
+
+Artifacts embed a JSON *provenance* record (fit fingerprint, fit config,
+error metrics, library version, creation time) next to the coefficient
+arrays, so a deployed table can always answer "which fit produced you?".
+Legacy artifacts without the record keep loading (provenance() -> None).
+
+Multi-format tables (paper Secs. III & V): ``dtype="bf16" | "f16"`` returns
+the table with coefficients *quantized to that storage format* — the jnp
+evaluation path then runs in that dtype, and the Pallas kernels consume the
+quantized values upcast to f32 operands (format error is in the table, the
+decode arithmetic stays full-rate f32, mirroring the ASIC's wide MADD
+accumulator over narrow table memories).
+
+Tables are cached as HOST (numpy) arrays: a device/jnp array created while a
+jit trace is active would leak a tracer through the cache into later traces;
+jnp ops consume numpy operands as fresh constants per trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+import warnings
+from typing import Optional
+
+import numpy as np
+
+from repro.core import fit as fitlib
+from repro.core import functions as F
+from repro.core import pwl
+
+from .spec import DEFAULT_FIT, FIT_UNIFORM, JNP_DTYPES, ApproxSpec
+
+# canonical artifact location (the old registry.TABLE_DIR)
+TABLE_DIR = pathlib.Path(__file__).parent.parent / "core" / "tables"
+
+PROVENANCE_SCHEMA = 1
+
+
+def quantize_table(table: pwl.PWLTable, dtype: str) -> pwl.PWLTable:
+    """Round-trip a table's coefficients through a storage format.
+
+    For ``"f32"`` this is the identity.  For ``"bf16"``/``"f16"`` the
+    breakpoints, slopes, and intercepts are quantized to the narrow format —
+    the per-element error of every downstream evaluation then includes the
+    format error, exactly as if the hardware table memories stored that type.
+    """
+    if dtype == "f32":
+        return table
+    np_dtype = JNP_DTYPES[dtype]
+    return pwl.PWLTable(
+        bp=np.asarray(table.bp).astype(np_dtype),
+        m=np.asarray(table.m).astype(np_dtype),
+        q=np.asarray(table.q).astype(np_dtype),
+        name=table.name,
+    )
+
+
+class TableStore:
+    """Artifact-backed table cache with fit-on-miss and fallback upgrade."""
+
+    def __init__(
+        self,
+        root: Optional[pathlib.Path] = None,
+        fit_on_miss: bool = False,
+        fit_config: Optional[fitlib.FitConfig] = None,
+    ):
+        self.root = pathlib.Path(root) if root is not None else TABLE_DIR
+        self.fit_on_miss = fit_on_miss
+        self.fit_config = fit_config
+        self._cache: dict[tuple, pwl.PWLTable] = {}
+        self._fallback: set[tuple] = set()   # keys served by the uniform fallback
+        self._warned_missing = False
+
+    # -- paths ---------------------------------------------------------------
+    def artifact_path(self, fn: str, n_breakpoints: int, fit: str = DEFAULT_FIT) -> pathlib.Path:
+        """On-disk artifact for a (fn, n_bp, fit) triple.  The default fit
+        fingerprint keeps the historical ``<fn>_<n>bp.npz`` name so shipped
+        artifacts (and external tooling) stay valid."""
+        if fit == DEFAULT_FIT:
+            return self.root / f"{fn}_{n_breakpoints}bp.npz"
+        return self.root / f"{fn}_{n_breakpoints}bp__{fit}.npz"
+
+    # -- read ----------------------------------------------------------------
+    def get(
+        self,
+        spec: Optional[ApproxSpec] = None,
+        *,
+        fn: Optional[str] = None,
+        n_breakpoints: int = 32,
+        dtype: str = "f32",
+        fit: str = DEFAULT_FIT,
+    ) -> pwl.PWLTable:
+        """Table for a spec (or keyword key), quantized to the spec's dtype.
+
+        Misses resolve in order: fitted artifact on disk -> fit-on-miss (if
+        enabled) -> uniform-breakpoint fallback (warns once overall, and the
+        cache entry stays *upgradeable*: later calls re-check the artifact).
+        """
+        if spec is not None:
+            fn, n_breakpoints, dtype, fit = spec.table_key
+        if fn is None:
+            raise TypeError("get() needs a spec or fn=")
+        key = (fn, n_breakpoints, dtype, fit)
+        cached = self._cache.get(key)
+        if cached is not None and key not in self._fallback:
+            return cached
+
+        if fit == FIT_UNIFORM:
+            table = self._uniform(fn, n_breakpoints)
+            table = quantize_table(table, dtype)
+            self._cache[key] = table
+            return table
+
+        path = self.artifact_path(fn, n_breakpoints, fit)
+        if path.exists():
+            table = quantize_table(self._load(path, fn), dtype)
+            self._cache[key] = table
+            self._fallback.discard(key)  # fallback upgraded to the fitted table
+            return table
+
+        if self.fit_on_miss:
+            result = fitlib.fit(fn, n_breakpoints, cfg=self.fit_config)
+            self.put(result.table, fit=fit, mse=result.mse, mae=result.mae,
+                     extra={"range": list(result.range), "trigger": "fit-on-miss"})
+            return self.get(fn=fn, n_breakpoints=n_breakpoints, dtype=dtype, fit=fit)
+
+        if cached is not None:  # known fallback, artifact still missing
+            return cached
+        if not self._warned_missing:
+            self._warned_missing = True
+            warnings.warn(
+                f"no fitted PWL table at {path}; using uniform-breakpoint "
+                "fallback for missing tables (run `python -m "
+                "repro.core.gen_tables` to generate fitted artifacts)"
+            )
+        table = quantize_table(self._uniform(fn, n_breakpoints), dtype)
+        self._cache[key] = table
+        self._fallback.add(key)
+        return table
+
+    def provenance(self, fn: str, n_breakpoints: int, fit: str = DEFAULT_FIT) -> Optional[dict]:
+        """Embedded provenance record of an artifact, or None (no artifact /
+        legacy artifact written before provenance existed)."""
+        path = self.artifact_path(fn, n_breakpoints, fit)
+        if not path.exists():
+            return None
+        with np.load(path) as data:
+            if "provenance" not in data.files:
+                return None
+            return json.loads(str(data["provenance"]))
+
+    # -- write ---------------------------------------------------------------
+    def put(
+        self,
+        table: pwl.PWLTable,
+        fit: str = DEFAULT_FIT,
+        mse: Optional[float] = None,
+        mae: Optional[float] = None,
+        extra: Optional[dict] = None,
+    ) -> pathlib.Path:
+        """Persist a fitted table with embedded provenance; invalidates any
+        fallback entries the new artifact supersedes (all dtypes)."""
+        import repro
+
+        fn = table.name
+        F.get(fn)  # the artifact must name a known function
+        n_bp = int(np.asarray(table.bp).shape[0])
+        self.root.mkdir(parents=True, exist_ok=True)
+        path = self.artifact_path(fn, n_bp, fit)
+        prov = {
+            "schema": PROVENANCE_SCHEMA,
+            "fn": fn,
+            "n_breakpoints": n_bp,
+            "n_segments": n_bp + 1,
+            "fit": fit,
+            "repro_version": repro.__version__,
+            "created_unix": int(time.time()),
+        }
+        if mse is not None:
+            prov["mse"] = float(mse)
+        if mae is not None:
+            prov["mae"] = float(mae)
+        if extra:
+            prov.update(extra)
+        payload = {
+            "bp": np.asarray(table.bp, np.float32),
+            "m": np.asarray(table.m, np.float32),
+            "q": np.asarray(table.q, np.float32),
+            "provenance": json.dumps(prov),
+        }
+        if mse is not None:  # legacy keys some benchmarks read
+            payload["mse"] = mse
+        if mae is not None:
+            payload["mae"] = mae
+        np.savez(path, **payload)
+        for key in [k for k in self._cache if k[0] == fn and k[1] == n_bp and k[3] == fit]:
+            del self._cache[key]
+            self._fallback.discard(key)
+        return path
+
+    def fit_and_put(
+        self, fn: str, n_breakpoints: int, fit: str = DEFAULT_FIT,
+        fit_config: Optional[fitlib.FitConfig] = None,
+    ) -> fitlib.FitResult:
+        """Run the paper's SGD fit (core/fit.py) and persist the artifact."""
+        cfg = fit_config or self.fit_config
+        result = fitlib.fit(fn, n_breakpoints, cfg=cfg)
+        self.put(
+            result.table, fit=fit, mse=result.mse, mae=result.mae,
+            extra={
+                "range": list(result.range),
+                "fit_config": dataclasses.asdict(cfg) if cfg else "default",
+            },
+        )
+        return result
+
+    # -- internals -----------------------------------------------------------
+    @staticmethod
+    def _load(path: pathlib.Path, fn: str) -> pwl.PWLTable:
+        with np.load(path) as data:
+            return pwl.PWLTable(
+                bp=np.asarray(data["bp"], np.float32),
+                m=np.asarray(data["m"], np.float32),
+                q=np.asarray(data["q"], np.float32),
+                name=fn,
+            )
+
+    @staticmethod
+    def _uniform(fn: str, n_breakpoints: int) -> pwl.PWLTable:
+        spec = F.get(fn)
+        t = pwl.make_uniform_table(spec, n_breakpoints)
+        return pwl.PWLTable(
+            bp=np.asarray(t.bp), m=np.asarray(t.m), q=np.asarray(t.q), name=fn
+        )
+
+
+_DEFAULT_STORE: Optional[TableStore] = None
+
+
+def get_store() -> TableStore:
+    """Process-wide default store over the shipped artifact directory."""
+    global _DEFAULT_STORE
+    if _DEFAULT_STORE is None:
+        _DEFAULT_STORE = TableStore()
+    return _DEFAULT_STORE
