@@ -1,0 +1,138 @@
+"""Fused-vs-unfused MoE expert FFN latency: exact / pwl / pwl_fused.
+
+The MoE sibling of ``bench_fused_mlp.py`` (ISSUE 4): after token dispatch,
+every expert applies its own GLU to a (capacity, d_model) bucket —
+
+    h = act(buf @ Wg[e]) * (buf @ Wu[e]);   y = h @ Wd[e]
+
+Unfused, the two (E, C, F) pre-activations and the activation output each
+round-trip HBM; ``pwl_fused`` evaluates the non-uniform PWL decode as an
+epilogue of the per-expert gemms (kernels/fused/moe.py) so the activation
+and gating cost zero extra traffic.  Emits CSV rows via benchmarks/common.py
+AND a machine-readable ``BENCH_fused_moe.json`` (per-mode latency + output
+MSE vs the exact mode) at the repo root.
+
+    PYTHONPATH=src python benchmarks/bench_fused_moe.py [--quick] [--out PATH]
+
+Note: on CPU the Pallas path runs in interpret mode — latency numbers are
+only meaningful on TPU; --quick exists for CI smoke coverage.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro import sfu
+from repro.core import pwl
+from repro.kernels import fused
+
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_fused_moe.json"
+
+try:  # package-style (python -m benchmarks.run) or script-style invocation
+    from .common import emit, time_fn
+except ImportError:
+    from common import emit, time_fn
+
+
+def make_expert_ffn(mode: str, table):
+    if mode == "exact":
+        from repro.core import functions as F
+
+        act = F.get(table.name).fn
+    elif mode == "pwl":
+        def act(x):
+            return pwl.eval_coeff(x, table)
+
+    if mode == "pwl_fused":
+        @jax.jit
+        def ffn(x, wg, wu, wd):
+            h = fused.fused_moe_glu(x, wg, wu, table=table)
+            return jnp.einsum("ecf,efd->ecd", h, wd)
+    else:
+        @jax.jit
+        def ffn(x, wg, wu, wd):
+            g = jnp.einsum("ecd,edf->ecf", x, wg)
+            u = jnp.einsum("ecd,edf->ecf", x, wu)
+            return jnp.einsum("ecf,efd->ecd", act(g) * u, wd)
+
+    return ffn
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="tiny shapes (CI smoke)")
+    ap.add_argument("--experts", type=int, default=64)
+    ap.add_argument("--capacity", type=int, default=512)
+    ap.add_argument("--d-model", type=int, default=2048)
+    ap.add_argument("--d-ff", type=int, default=1024)
+    ap.add_argument("--activation", default="silu")
+    ap.add_argument("--breakpoints", type=int, default=32)
+    ap.add_argument("--out", default=str(DEFAULT_OUT),
+                    help="machine-readable results JSON path")
+    # parse_known_args: tolerate the runner's own flags (benchmarks/run.py)
+    args, _ = ap.parse_known_args(argv)
+
+    if jax.default_backend() == "cpu" and not args.quick:
+        print("# cpu backend: forcing --quick shapes (interpret mode)")
+        args.quick = True
+    if args.quick:
+        args.experts, args.capacity, args.d_model, args.d_ff = 8, 32, 128, 256
+    iters = 3 if args.quick else 10
+
+    table = sfu.get_store().get(
+        fn=args.activation, n_breakpoints=args.breakpoints
+    )
+    kx, kg, ku, kd = jax.random.split(jax.random.PRNGKey(0), 4)
+    dtype = jnp.float32 if jax.default_backend() == "cpu" else jnp.bfloat16
+    E, C, D, F = args.experts, args.capacity, args.d_model, args.d_ff
+    x = jax.random.normal(kx, (E, C, D), dtype)
+    wg = jax.random.normal(kg, (E, D, F), dtype) * 0.02
+    wu = jax.random.normal(ku, (E, D, F), dtype) * 0.02
+    wd = jax.random.normal(kd, (E, F, D), dtype) * 0.02
+
+    print(f"# backend={jax.default_backend()} experts={E} capacity={C} "
+          f"d_model={D} d_ff={F} act={args.activation}")
+    base = None
+    y_exact = None
+    results = {}
+    for mode in ("exact", "pwl", "pwl_fused"):
+        fn = make_expert_ffn(mode, table)
+        us = time_fn(fn, x, wg, wu, wd,
+                     warmup=1 if args.quick else 2, iters=iters)
+        y = fn(x, wg, wu, wd).astype(jnp.float32)
+        if base is None:
+            base = us
+            y_exact = y
+        mse = float(jnp.mean((y - y_exact) ** 2))
+        results[mode] = {
+            "us_per_call": round(us, 2),
+            "speedup_vs_exact": round(base / us, 4),
+            "mse_vs_exact": mse,
+        }
+        emit(f"moe_expert_ffn_{mode}", us, f"{base / us:.2f}x_vs_exact")
+
+    payload = {
+        "benchmark": "fused_moe",
+        "backend": jax.default_backend(),
+        "interpret_mode": jax.default_backend() != "tpu",
+        "unix_time": int(time.time()),
+        "shape": {"experts": E, "capacity": C, "d_model": D, "d_ff": F,
+                  "dtype": str(jnp.dtype(dtype))},
+        "activation": args.activation,
+        "breakpoints": args.breakpoints,
+        "quick": bool(args.quick),
+        "modes": results,
+    }
+    out = pathlib.Path(args.out)
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# results -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,7 @@ BENCHMARKS = [
     ("fig4_throughput", "benchmarks.bench_fig4_throughput"),
     ("table3_model_accuracy", "benchmarks.bench_table3_model_accuracy"),
     ("fused_mlp", "benchmarks.bench_fused_mlp"),
+    ("fused_moe", "benchmarks.bench_fused_moe"),
     ("roofline", "benchmarks.bench_roofline"),
 ]
 

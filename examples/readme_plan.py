@@ -1,0 +1,22 @@
+"""The README's `sfu.compile_plan` example, verbatim.
+
+The docs-smoke CI job executes this file so the README code block can never
+rot: the block between BEGIN/END below is included in README.md word for
+word — edit them together.
+"""
+# --- BEGIN README EXAMPLE ---
+import jax.numpy as jnp
+
+from repro import sfu
+from repro.configs import get_reduced_config
+
+cfg = get_reduced_config("olmoe-1b-7b", act_impl="pwl_fused", pwl_softmax=True)
+plan = sfu.compile_plan(cfg)                 # one ApproxSpec per activation site
+print(plan.dumps())                          # JSON a serving job can reload
+assert plan.spec("moe.expert:silu").impl == "fused"   # expert-FFN GLU epilogue
+assert plan.spec("attn.softmax:exp").impl == "fused"  # PWL-exp softmax kernel
+act = plan.act("moe.expert:silu")            # elementwise (unfused) evaluation
+print("pwl silu(1.0) =", float(act(jnp.float32(1.0))))
+table = sfu.get_store().get(plan.spec("moe.expert:silu"))  # the fitted table
+print("table:", table.name, table.bp.shape[0], "breakpoints,", plan.fingerprint)
+# --- END README EXAMPLE ---

@@ -4,6 +4,7 @@ the middle of each 8-layer block), MoE every 2nd layer [arXiv:2403.19887; hf].""
 import dataclasses
 
 from repro.models import ModelConfig
+from repro.sfu import ApproxSpec
 
 CONFIG = ModelConfig(
     name="jamba-v0.1-52b",
@@ -25,7 +26,9 @@ CONFIG = ModelConfig(
     activation="silu",
     mlp_type="swiglu",
     norm_type="rmsnorm",
-    pwl_exempt=("ssm:silu",),  # see EXPERIMENTS.md "SSM sensitivity"
+    # explicit plan pin (successor of pwl_exempt="ssm:silu"): SSM-input SiLU
+    # stays exact under any act_impl — EXPERIMENTS.md "SSM sensitivity"
+    act_site_specs=(("ssm:silu", ApproxSpec(fn="silu", impl="exact")),),
 )
 
 

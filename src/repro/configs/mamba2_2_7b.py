@@ -3,6 +3,7 @@ ssm_state=128 - SSD (state-space duality) [arXiv:2405.21060; unverified]."""
 import dataclasses
 
 from repro.models import ModelConfig
+from repro.sfu import ApproxSpec
 
 CONFIG = ModelConfig(
     name="mamba2-2.7b",
@@ -21,8 +22,10 @@ CONFIG = ModelConfig(
     norm_type="rmsnorm",
     tie_embeddings=True,
     # SSM-input SiLU errors integrate through the recurrence (EXPERIMENTS.md
-    # "SSM sensitivity"): keep it exact by default; MLP/gate sites stay PWL.
-    pwl_exempt=("ssm:silu",),
+    # "SSM sensitivity"): pin the site exact regardless of the chosen
+    # act_impl.  Explicit plan pin — the plan-native successor of the
+    # deprecated ``pwl_exempt=("ssm:silu",)`` string knob (docs/plans.md).
+    act_site_specs=(("ssm:silu", ApproxSpec(fn="silu", impl="exact")),),
 )
 
 

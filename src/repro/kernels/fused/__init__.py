@@ -8,13 +8,20 @@ kernel that produced the pre-activation.  This package provides:
               plus identity / exact-activation epilogue plans
   linear    — fused  y = act(x @ W + b)        (blocked matmul + epilogue)
   glu       — fused  y = act(x @ Wg) * (x @ Wu) (the GLU-MLP hot path)
+  moe       — fused per-expert GLU: act(x[e] @ Wg[e]) * (x[e] @ Wu[e])
+              (the MoE expert-FFN hot path, expert dim as outer grid axis)
+  softmax   — fused PWL-exp softmax: row-max subtract, PWL exp, renormalize
+              in one resident pass (paper Sec. V-B)
   norm      — fused RMSNorm (+ optional activation epilogue)
 
 Models opt in through their activation plan: sites compiled with
 ``ApproxSpec(impl="fused")`` — e.g. via the legacy knob
 ``ModelConfig.act_impl = "pwl_fused"`` — dispatch here from
-``models/layers._fused_mlp_hidden``; non-fusable sites fall back to the
-unfused PWL path automatically (see repro.sfu).
+``models/layers._fused_mlp_hidden`` (mlp), ``models/moe.moe_layer``
+(moe.expert), and the attention softmax dispatch in ``models/layers.py``
+(attn.softmax); sites that cannot run fused at dispatch time fall back to
+the unfused PWL path and report it once via
+``repro.sfu.warn_fused_fallback``.
 """
 from .epilogue import (  # noqa: F401
     IDENTITY,
@@ -28,4 +35,6 @@ from .epilogue import (  # noqa: F401
 )
 from .glu import fused_glu  # noqa: F401
 from .linear import fused_linear  # noqa: F401
+from .moe import fused_moe_glu  # noqa: F401
 from .norm import fused_rmsnorm  # noqa: F401
+from .softmax import fused_pwl_softmax, pwl_softmax_reference  # noqa: F401

@@ -1,0 +1,155 @@
+"""Fused MoE-expert GLU Pallas kernel: ``act(x[e] @ Wg[e]) * (x[e] @ Wu[e])``.
+
+The MoE expert FFN (``models/moe.py``) runs a *batched* GLU: after dispatch,
+every expert owns a ``(capacity, d_model)`` bucket of tokens and applies its
+own gate/up projections.  Unfused, the two ``ecd,edf->ecf`` einsums each
+write a full ``(E, C, F)`` pre-activation to HBM, the activation reads one
+back, and the gating multiply reads both — exactly the round-trip the paper
+removes (Sec. V: the SFU evaluates the nonlinearity beside the MAC array).
+
+Here the expert dim is the *outer grid axis*: for each expert the kernel is
+the same two-accumulator blocked GLU as ``fused/glu.py`` — both gemms share
+the x tile, accumulate in two f32 VMEM scratch tiles, and on the last k step
+the non-uniform PWL decode (``fused/epilogue.pwl_eval_tile``) evaluates on
+the gate accumulator and multiplies with the up accumulator before the single
+writeback.  Per-expert weights arrive as ``(1, bk, bn)`` blocks indexed by
+the expert grid coordinate, so no expert ever materializes another expert's
+tiles.
+
+Grid ``(E, C/bm, F/bn, K/bk)`` with k innermost: TPU grids iterate
+minor-to-major sequentially, so the accumulator scratch is valid across k
+steps for each (e, i, j) tile.  Padding follows ``fused/linear.py`` (zeros
+contribute nothing to the accumulator; padded rows/cols are sliced away).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.pwl import PWLTable
+
+from .._backend import should_interpret
+from .epilogue import EpiloguePlan, plan_and_operands, plan_value_and_slope
+from .linear import DEFAULT_BLOCK, _aligned_block, _pad_to
+
+
+def _moe_glu_kernel(*refs, plan: EpiloguePlan, nk: int):
+    n_tab = plan.n_operands
+    x_ref, wg_ref, wu_ref = refs[0], refs[1], refs[2]
+    tab_refs = refs[3 : 3 + n_tab]
+    o_ref, accg_ref, accu_ref = refs[3 + n_tab], refs[4 + n_tab], refs[5 + n_tab]
+
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _():
+        accg_ref[...] = jnp.zeros_like(accg_ref)
+        accu_ref[...] = jnp.zeros_like(accu_ref)
+
+    x = x_ref[0]  # (bm, bk) tile of this expert's capacity bucket
+    accg_ref[...] += jnp.dot(x, wg_ref[0], preferred_element_type=jnp.float32)
+    accu_ref[...] += jnp.dot(x, wu_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _():
+        g = plan.apply(accg_ref[...], *tab_refs)
+        o_ref[0] = (g * accu_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "block", "interpret"))
+def _fused_moe_glu_3d(x, wg, wu, tables, *, plan, block, interpret):
+    E, C, K = x.shape
+    N = wg.shape[2]
+    bm, bn, bk = _aligned_block(block, (C, N, K), x.dtype)
+    xp = _pad_to(x, (1, bm, bk))
+    wgp = _pad_to(wg, (1, bk, bn))
+    wup = _pad_to(wu, (1, bk, bn))
+    Cp, Kp = xp.shape[1], xp.shape[2]
+    Np = wgp.shape[2]
+    nk = Kp // bk
+    grid = (E, Cp // bm, Np // bn, nk)
+
+    in_specs = [
+        pl.BlockSpec((1, bm, bk), lambda e, i, j, k: (e, i, k)),
+        pl.BlockSpec((1, bk, bn), lambda e, i, j, k: (e, k, j)),
+        pl.BlockSpec((1, bk, bn), lambda e, i, j, k: (e, k, j)),
+    ]
+    for rows, cols in plan.table_specs():
+        in_specs.append(pl.BlockSpec((rows, cols), lambda e, i, j, k: (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_moe_glu_kernel, plan=plan, nk=nk),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm, bn), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, Cp, Np), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, bn), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, wgp, wup, *tables)
+    return out[:, :C, :N]
+
+
+# --- autodiff: fused forward, pure-jnp recompute backward ------------------
+# (see fused/linear.py for the rationale; the recompute is the batched
+# analogue of fused/glu.py's backward)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _moe_glu_op(x, wg, wu, tables, plan, block, interpret):
+    return _fused_moe_glu_3d(x, wg, wu, tables, plan=plan, block=block,
+                             interpret=interpret)
+
+
+def _moe_glu_op_fwd(x, wg, wu, tables, plan, block, interpret):
+    y = _moe_glu_op(x, wg, wu, tables, plan, block, interpret)
+    return y, (x, wg, wu, tables)
+
+
+def _moe_glu_op_bwd(plan, block, interpret, res, g):
+    x, wg, wu, tables = res
+    xf, wgf, wuf, gf = (a.astype(jnp.float32) for a in (x, wg, wu, g))
+    zg = jnp.einsum("ecd,edf->ecf", xf, wgf)
+    zu = jnp.einsum("ecd,edf->ecf", xf, wuf)
+    act_zg, slope = plan_value_and_slope(plan, tables, zg)
+    dzg = gf * zu * slope
+    dzu = gf * act_zg
+    dx = (
+        jnp.einsum("ecf,edf->ecd", dzg, wgf)
+        + jnp.einsum("ecf,edf->ecd", dzu, wuf)
+    ).astype(x.dtype)
+    dwg = jnp.einsum("ecd,ecf->edf", xf, dzg).astype(wg.dtype)
+    dwu = jnp.einsum("ecd,ecf->edf", xf, dzu).astype(wu.dtype)
+    dtables = jax.tree_util.tree_map(jnp.zeros_like, tables)
+    return dx, dwg, dwu, dtables
+
+
+_moe_glu_op.defvjp(_moe_glu_op_fwd, _moe_glu_op_bwd)
+
+
+def fused_moe_glu(
+    x: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    *,
+    table: PWLTable | None = None,
+    act: str | None = None,
+    block=DEFAULT_BLOCK,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Per-expert ``act(x[e] @ w_gate[e]) * (x[e] @ w_up[e])`` in one pass.
+
+    x: (E, C, K) dispatched expert buckets;  w_gate/w_up: (E, K, N).
+    Epilogue selection as in :func:`fused_glu` (table -> PWL, act -> exact,
+    neither -> identity / plain bilinear GLU).  Returns (E, C, N).
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    plan, tables = plan_and_operands(table, act)
+    return _moe_glu_op(x, w_gate, w_up, tables, plan, block, interpret)

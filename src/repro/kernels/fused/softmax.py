@@ -1,0 +1,258 @@
+"""Fused PWL-exp softmax Pallas kernel (paper Sec. V-B).
+
+Softmax is the one activation the paper treats specially: the exponential
+runs on *shifted* scores (``exp(x - max)``), so Flex-SFU fits ``exp`` on
+``[-10, 0.1]`` and evaluates it with the same non-uniform PWL datapath as
+every other function (``core/functions.py`` ships that spec; the ``exp``
+table artifacts are in ``core/tables``).  Unfused, the PWL softmax costs
+three elementwise passes over the score matrix (row-max subtract, PWL exp,
+renormalize) on top of the pass that produced the scores.  This kernel does
+the whole reduction on one resident tile: each grid step owns a
+``(block_rows, N)`` stripe of rows, computes the row max, the shifted PWL
+decode (``fused/epilogue.pwl_eval_tile``), the non-negativity clamp, the
+mask, and the renormalization, then writes the probabilities back once.
+
+Masking: with a caller mask the kernel takes an explicit ``{0, 1}`` float
+indicator operand (column padding folded in); maskless calls mask only the
+column padding from a static in-kernel iota — no materialized operand.
+Masked scores are replaced with ``-1e30`` *before* the row max and
+multiplied by the mask *after* the clamp — identical to the unfused path in
+``models/layers.py``
+(``p = where(mask, max(pwl_exp(s - m), 0), 0)``).  The shifted scores are
+additionally clamped to ``>= -1e4`` so the linear left tail of the PWL
+table cannot overflow on ``-1e30`` fill values; every surviving entry is
+zeroed by the mask regardless.
+
+The backward pass is a pure-jnp recompute (:func:`pwl_softmax_reference`)
+via ``jax.vjp`` — matching the custom-VJP discipline of the other fused
+kernels (forward fused, backward rematerializes; backward fusion is a
+ROADMAP item).
+
+Width bound: the whole (128-padded) reduction axis stays VMEM-resident and
+the row block bottoms out at one sublane tile, so rows wider than ~52-64k
+columns (masked/maskless) exceed the VMEM budget and will not lower on TPU
+(interpret mode accepts them).  Model dispatch refuses such shapes up front
+with margin (``models/layers.DENSE_FUSED_SOFTMAX_MAX_WIDTH`` = 32k).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.pwl import PWLTable
+
+from .._backend import should_interpret
+from .epilogue import EpiloguePlan, plan_and_operands, plan_value_and_slope
+from .linear import _round_up
+
+# default row-block height; shrunk automatically to fit the VMEM budget
+DEFAULT_BLOCK_ROWS = 256
+
+_NEG_FILL = -1e30   # masked-score fill, matches models/layers.py
+_SHIFT_CLAMP = -1e4  # lower clamp on shifted scores (see module docstring)
+_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def _softmax_kernel(*refs, plan: EpiloguePlan, has_mask: bool, n_valid: int,
+                    seq_len: int, causal: bool, window):
+    n_tab = plan.n_operands
+    x_ref = refs[0]
+    off = 2 if has_mask else 1
+    tab_refs = refs[off : off + n_tab]
+    o_ref = refs[off + n_tab]
+
+    xf = x_ref[...].astype(jnp.float32)
+    if has_mask:
+        mask = refs[1][...]
+    else:
+        # no mask operand: column padding — and the position-static
+        # causal/window structure of dense attention — are synthesized from
+        # iotas in-register, instead of materializing a score-sized mask
+        # array in HBM (rows flatten (..., seq_len), so qpos = row % S)
+        col = jax.lax.broadcasted_iota(jnp.int32, xf.shape, 1)
+        keep = col < n_valid
+        if causal or window is not None:
+            row = jax.lax.broadcasted_iota(jnp.int32, xf.shape, 0)
+            row = row + pl.program_id(0) * xf.shape[0]
+            qpos = jax.lax.rem(row, seq_len)
+            if causal:
+                keep &= col <= qpos
+            if window is not None:
+                keep &= (qpos - col) < window
+        mask = keep.astype(jnp.float32)
+    xm = jnp.where(mask > 0, xf, jnp.float32(_NEG_FILL))
+    m = jnp.max(xm, axis=-1, keepdims=True)
+    s = jnp.maximum(xm - m, jnp.float32(_SHIFT_CLAMP))
+    p = jnp.maximum(plan.apply(s, *tab_refs), 0.0) * mask
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = (p / jnp.maximum(l, jnp.float32(1e-30))).astype(o_ref.dtype)
+
+
+def _row_block(block_rows: int, n_rows: int, n_cols_padded: int,
+               has_mask: bool) -> int:
+    """Clamp the row-block height to the rows present and the VMEM budget:
+    x + out tiles plus ~2 f32 temporaries, +1 for the mask operand when
+    present.  Operands are always f32 (the wrapper upcasts 2-byte scores),
+    so the sublane floor is 8; at that floor the budget admits ~64k columns
+    maskless / ~52k masked — the model dispatch caps width at 32k
+    (``models/layers.DENSE_FUSED_SOFTMAX_MAX_WIDTH``) to leave margin."""
+    n_arrays = 5 if has_mask else 4
+    sub = 8
+    bm = min(block_rows, _round_up(n_rows, sub))
+    bm = _round_up(bm, sub)
+    while bm > sub and bm * n_cols_padded * 4 * n_arrays > _VMEM_BUDGET_BYTES:
+        bm = max(sub, _round_up(bm // 2, sub))
+    return bm
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "plan", "block_rows", "interpret", "seq_len", "causal", "window"))
+def _fused_softmax_2d(x, mask, tables, *, plan, block_rows, interpret,
+                      seq_len, causal, window):
+    R, N = x.shape
+    Np = _round_up(N, 128)
+    has_mask = mask is not None
+    bm = _row_block(block_rows, R, Np, has_mask)
+    xp = jnp.pad(x, ((0, _round_up(R, bm) - R), (0, Np - N)))
+    Rp = xp.shape[0]
+
+    operands = [xp]
+    in_specs = [pl.BlockSpec((bm, Np), lambda i: (i, 0))]
+    if has_mask:
+        operands.append(jnp.pad(mask, ((0, Rp - R), (0, Np - N))))
+        in_specs.append(pl.BlockSpec((bm, Np), lambda i: (i, 0)))
+    for rows, cols in plan.table_specs():
+        in_specs.append(pl.BlockSpec((rows, cols), lambda i: (0, 0)))
+    operands.extend(tables)
+
+    out = pl.pallas_call(
+        functools.partial(_softmax_kernel, plan=plan, has_mask=has_mask,
+                          n_valid=N, seq_len=seq_len, causal=causal,
+                          window=window),
+        grid=(Rp // bm,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, Np), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Rp, Np), x.dtype),
+        interpret=interpret,
+    )(*operands)
+    return out[:R, :N]
+
+
+def _static_mask(R: int, N: int, seq_len: int, causal: bool, window):
+    """Materialized (R, N) equivalent of the kernel's in-register
+    causal/window iota mask — only the VJP recompute and tests build it."""
+    qpos = jnp.arange(R) % seq_len
+    col = jnp.arange(N)
+    keep = jnp.ones((R, N), bool)
+    if causal:
+        keep &= col[None, :] <= qpos[:, None]
+    if window is not None:
+        keep &= (qpos[:, None] - col[None, :]) < window
+    return keep.astype(jnp.float32)
+
+
+def pwl_softmax_reference(x, mask, tables, plan: EpiloguePlan):
+    """Pure-jnp reference of the kernel math (also the VJP recompute path).
+
+    Bit-matches the kernel op-for-op (``mask=None`` == the kernel's
+    maskless variant on unpadded rows); tests compare against it, and the
+    backward pass autodiffs through it.
+    """
+    xf = x.astype(jnp.float32)
+    xm = xf if mask is None else jnp.where(mask > 0, xf, jnp.float32(_NEG_FILL))
+    m = jnp.max(xm, axis=-1, keepdims=True)
+    s = jnp.maximum(xm - m, jnp.float32(_SHIFT_CLAMP))
+    p = jnp.maximum(plan_value_and_slope(plan, tables, s)[0], 0.0)
+    if mask is not None:
+        p = p * mask
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    return (p / jnp.maximum(l, jnp.float32(1e-30))).astype(x.dtype)
+
+
+# --- autodiff: fused forward, pure-jnp recompute backward ------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _softmax_op(x, mask, tables, plan, block_rows, interpret, seq_len,
+                causal, window):
+    return _fused_softmax_2d(x, mask, tables, plan=plan,
+                             block_rows=block_rows, interpret=interpret,
+                             seq_len=seq_len, causal=causal, window=window)
+
+
+def _softmax_op_fwd(x, mask, tables, plan, block_rows, interpret, seq_len,
+                    causal, window):
+    y = _softmax_op(x, mask, tables, plan, block_rows, interpret, seq_len,
+                    causal, window)
+    return y, (x, mask, tables)
+
+
+def _softmax_op_bwd(plan, block_rows, interpret, seq_len, causal, window,
+                    res, g):
+    x, mask, tables = res
+    m = mask
+    if m is None and (causal or window is not None):
+        m = _static_mask(x.shape[0], x.shape[1], seq_len, causal, window)
+    _, vjp = jax.vjp(lambda xx: pwl_softmax_reference(xx, m, tables, plan), x)
+    dx = vjp(g)[0].astype(x.dtype)
+    dtables = jax.tree_util.tree_map(jnp.zeros_like, tables)
+    dmask = None if mask is None else jnp.zeros_like(mask)
+    return dx, dmask, dtables
+
+
+_softmax_op.defvjp(_softmax_op_fwd, _softmax_op_bwd)
+
+
+def fused_pwl_softmax(
+    x: jax.Array,
+    *,
+    table: PWLTable | None = None,
+    act: str | None = None,
+    mask: jax.Array | None = None,
+    causal: bool = False,
+    window: int | None = None,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Softmax over the last axis with a PWL-approximated exponential.
+
+    x:      (..., N) scores.
+    table:  PWL table for ``exp`` (the ``attn.softmax:exp`` plan site);
+            ``act="exp"`` (the default when neither is given) runs the exact
+            exponential inside the same fused reduction.
+    mask:   optional validity mask broadcastable to ``x.shape`` (nonzero =
+            keep); masked entries get probability exactly 0 and rows with no
+            valid entry return all zeros.
+    causal/window: position-static attention masking synthesized *inside*
+            the kernel from iotas (q position = second-to-last axis index,
+            zero offset; key position = last axis index) — no score-sized
+            mask array is ever materialized.  Mutually exclusive with
+            ``mask``; use ``mask`` for dynamic validity (decode caches).
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    if table is None and act is None:
+        act = "exp"
+    if mask is not None and (causal or window is not None):
+        raise ValueError("pass either mask= (dynamic) or causal=/window= "
+                         "(static, synthesized in-kernel), not both")
+    plan, tables = plan_and_operands(table, act)
+    lead, N = x.shape[:-1], x.shape[-1]
+    seq_len = x.shape[-2] if (causal or window is not None) else 1
+    # f32 operands: the decode is f32 anyway, and a fixed operand dtype keeps
+    # the sublane floor at 8 so the VMEM budget / width-cap math holds
+    x2 = x.reshape(-1, N).astype(jnp.float32)
+    if mask is None:
+        mask2 = None  # kernel masks padding (and causal/window) via iotas
+    else:
+        # {0,1} indicator ("nonzero = keep"): a raw float mask must not
+        # weight the probabilities, only select them
+        mask2 = (jnp.broadcast_to(mask, x.shape).reshape(-1, N) != 0).astype(
+            jnp.float32
+        )
+    y = _softmax_op(x2, mask2, tables, plan, block_rows, interpret, seq_len,
+                    causal, window)
+    return y.reshape(*lead, N).astype(x.dtype)

@@ -6,6 +6,12 @@ backbone is faithful: bidirectional encoder, causal decoder with
 cross-attention, LayerNorm + biased MLPs + GELU (resolved through the
 compiled activation plan, repro.sfu), sinusoidal positions (stand-in for
 Whisper's learned embeddings).
+
+All attention here (encoder self-, decoder self- and cross-attention) flows
+through ``layers.attention_layer``, so a plan compiling ``attn.softmax:exp``
+with ``impl="fused"`` routes the softmax through the fused dense PWL-exp
+kernel (``kernels/fused/softmax.py``) on the same dispatch/fallback rules as
+the decoder-only models; MLP sites fuse via ``layers._fused_mlp_hidden``.
 """
 from __future__ import annotations
 

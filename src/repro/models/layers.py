@@ -10,6 +10,12 @@ softmax in f32): peak memory is O(q_chunk * kv_chunk) per head instead of
 O(S^2), which is what makes the 32k-prefill and 500k-decode dry-run cells fit.
 Sliding-window layers dynamic-slice the KV to [q_start-window, q_end), making
 local attention O(S * window) compute instead of O(S^2).
+
+When the plan compiles ``attn.softmax:exp`` with ``impl="fused"`` (paper
+Sec. V-B), attention routes through the fused dense PWL-exp softmax kernel
+instead (``kernels/fused/softmax.py``) — gated by
+``DENSE_FUSED_SOFTMAX_MAX_SCORES`` and single-device dispatch, with a
+warn-once fallback to the flash path (``sfu.warn_fused_fallback``).
 """
 from __future__ import annotations
 
@@ -98,16 +104,108 @@ def resolve_exp(cfg: ModelConfig, plan=None) -> Callable:
     plan = plan if plan is not None else sfu.plan_for(cfg)
     spec = plan.get(sfu.site_key(sfu.SITE_SOFTMAX, "exp"))
     if spec is not None and not spec.is_exact:
-        # resolve_spec honors the spec's impl (jnp / kernel / fused-fallback);
-        # the clamp keeps the PWL approximation of exp non-negative so the
-        # softmax normalizer stays positive
+        # resolve_spec honors the spec's impl (jnp / kernel / fused-fallback).
+        # Two clamps keep the PWL approximation of exp softmax-safe: the
+        # output clamp keeps it non-negative so the normalizer stays
+        # positive, and the input clamp (exp's fit range is [-10, 0.1];
+        # exp(-30) is already ~1e-13) keeps the -1e30 mask fills of the
+        # attention paths from overflowing the table's linear left tail —
+        # narrow-dtype (f16) tables evaluate in f16, where -1e30 becomes
+        # -inf and a flushed-to-zero slope turns it into NaN.
         raw = sfu.resolve_spec(spec)
 
         def pwl_exp(x):
-            return jnp.maximum(raw(x), 0.0)
+            return jnp.maximum(raw(jnp.maximum(x, -30.0)), 0.0)
 
         return pwl_exp
     return jnp.exp
+
+
+# fused dense-softmax size caps.  MAX_SCORES bounds the TOTAL score-tensor
+# elements (B*H*S*T) the dense path materializes in f32 (~0.5 GiB at the
+# default) — the flash online softmax it replaces never allocates that
+# tensor, so past the cap flash (with the elementwise PWL exp) wins on
+# memory.  MAX_WIDTH bounds the softmax reduction axis: the kernel keeps the
+# whole (128-padded) row in VMEM and its row block bottoms out at 8
+# sublanes, where the 8 MiB budget admits ~52k masked / ~64k maskless
+# columns — the 32k cap leaves margin for both; wider rows (e.g. 500k-token
+# decode caches) cannot lower on TPU and must take the unfused path.
+DENSE_FUSED_SOFTMAX_MAX_SCORES = 1 << 27
+DENSE_FUSED_SOFTMAX_MAX_WIDTH = 32768
+
+
+def _softmax_fused_table(plan, n_scores: Optional[int] = None,
+                         width: Optional[int] = None,
+                         window: Optional[int] = None,
+                         kv_len: Optional[int] = None):
+    """Table for the fused PWL-exp softmax kernel, or None when attention
+    must use the flash/online path (site absent or not planned fused, a
+    multi-device mesh is active, the score tensor / reduction width exceeds
+    the dense caps, or a sliding window covers too little of the KV for
+    dense scores to be worth it).  The single fused-softmax decision point,
+    mirroring ``plan.fused_table`` for producer epilogues; fallbacks on a
+    fused-planned site warn once."""
+    if plan is None:
+        return None
+    key = sfu.site_key(sfu.SITE_SOFTMAX, "exp")
+    spec = plan.get(key)
+    if spec is None or spec.impl != "fused":
+        return None
+    if sfu.mesh_blocks_fused(key):
+        return None
+    if window is not None and kv_len is not None and kv_len > 2 * window:
+        sfu.warn_fused_fallback(
+            key, f"sliding window ({window}) covers under half of the "
+            f"{kv_len}-token KV: the banded flash path (O(S*window) scores) "
+            "beats dense fused softmax (O(S*T)); using the elementwise PWL "
+            "exp"
+        )
+        return None
+    if n_scores is not None and n_scores > DENSE_FUSED_SOFTMAX_MAX_SCORES:
+        sfu.warn_fused_fallback(
+            key, f"score tensor ({n_scores} total elements) exceeds the "
+            "dense fused-softmax cap; using the elementwise PWL exp inside "
+            "flash attention"
+        )
+        return None
+    if width is not None and width > DENSE_FUSED_SOFTMAX_MAX_WIDTH:
+        sfu.warn_fused_fallback(
+            key, f"softmax reduction width ({width}) exceeds the fused "
+            "kernel's VMEM-resident row cap; using the elementwise PWL exp"
+        )
+        return None
+    return plan.fused_table(key)
+
+
+def dense_pwl_attention(q, k, v, *, table, causal=True, window=None):
+    """Dense attention with the fused PWL-exp softmax kernel (Sec. V-B).
+
+    q: (B, S, H, dh);  k/v: (B, T, Hkv, dh).  The softmax — row-max
+    subtract, non-uniform PWL exp, clamp, renormalize — runs as ONE Pallas
+    kernel over the score rows (``kernels/fused/softmax.py``) instead of
+    three elementwise passes.  Causal/window masking goes in through the
+    kernel's mask operand, exactly matching the unfused formulation
+    (masked scores filled with -1e30 pre-max, probabilities zeroed).
+    """
+    from repro.kernels import fused
+
+    B, S, H, dh = q.shape
+    T = k.shape[1]
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(dh)
+    # (B, G, Hkv, S, dh) — same (Hkv major, G minor) head split as flash
+    qf = q.astype(jnp.float32).reshape(B, S, Hkv, G, dh).transpose(0, 3, 2, 1, 4)
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)  # (B, Hkv, T, dh)
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    s = jnp.einsum("bghqd,bhkd->bghqk", qf, kf,
+                   preferred_element_type=jnp.float32) * scale
+    # causal/window structure is position-static: the kernel synthesizes it
+    # from iotas in-register, so no score-sized mask array is materialized
+    p = fused.fused_pwl_softmax(s, table=table, causal=causal, window=window)
+    out = jnp.einsum("bghqk,bhkd->bghqd", p, vf,
+                     preferred_element_type=jnp.float32)
+    return out.transpose(0, 3, 2, 1, 4).reshape(B, S, H, dh).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -304,8 +402,15 @@ def decode_attention(
     v_cache,  # (B, T, Hkv, dh)
     valid,    # (B, T) bool
     exp_fn: Callable = jnp.exp,
+    softmax_table=None,  # PWL exp table -> fused softmax kernel
 ):
-    """Single-position attention over a cache (dense, no chunking needed)."""
+    """Single-position attention over a cache (dense, no chunking needed).
+
+    With ``softmax_table`` set (site ``attn.softmax:exp`` planned
+    ``impl="fused"``), the row-max/PWL-exp/renormalize reduction runs as one
+    fused Pallas kernel; otherwise it is the elementwise ``exp_fn``
+    formulation below (identical math — see kernels/fused/softmax.py).
+    """
     B, _, H, dh = q.shape
     Hkv = k_cache.shape[2]
     G = H // Hkv
@@ -315,14 +420,22 @@ def decode_attention(
         "bhgd,bthd->bhgt", qf, k_cache.astype(jnp.float32),
         preferred_element_type=jnp.float32,
     ) * scale
-    s = jnp.where(valid[:, None, None, :], s, -1e30)
-    m = jnp.max(s, axis=-1, keepdims=True)
-    p = exp_fn(s - m)
-    p = jnp.where(valid[:, None, None, :], p, 0.0)
-    l = jnp.sum(p, axis=-1, keepdims=True)
+    if softmax_table is not None:
+        from repro.kernels import fused
+
+        p = fused.fused_pwl_softmax(
+            s, table=softmax_table, mask=valid[:, None, None, :]
+        )
+    else:
+        s = jnp.where(valid[:, None, None, :], s, -1e30)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = exp_fn(s - m)
+        p = jnp.where(valid[:, None, None, :], p, 0.0)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        p = p / jnp.maximum(l, 1e-30)
     out = jnp.einsum(
-        "bhgt,bthd->bhgd", p / jnp.maximum(l, 1e-30),
-        v_cache.astype(jnp.float32), preferred_element_type=jnp.float32,
+        "bhgt,bthd->bhgd", p, v_cache.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
     )
     return out.reshape(B, 1, H, dh).astype(q.dtype)
 
@@ -390,6 +503,24 @@ def _flash_or_sliced(cfg, q, k, v, *, causal, window, exp_fn):
     )
 
 
+def _attn_softmax_dispatch(cfg, q, k, v, *, causal, window, exp_fn, plan):
+    """Attention entry for train/prefill/cross: the fused dense PWL-exp
+    softmax path when the plan asks for it and the shapes/mesh allow, else
+    flash with the (possibly PWL) elementwise ``exp_fn``."""
+    B, S, H = q.shape[0], q.shape[1], q.shape[2]
+    T = k.shape[1]
+    table = _softmax_fused_table(plan, n_scores=B * H * S * T, width=T,
+                                 window=window, kv_len=T)
+    if table is not None:
+        return dense_pwl_attention(q, k, v, table=table, causal=causal,
+                                   window=window)
+    if not causal and window is None:  # cross-attention (encdec)
+        return flash_attention(q, k, v, causal=False, exp_fn=exp_fn,
+                               unroll=cfg.unroll_scans)
+    return _flash_or_sliced(cfg, q, k, v, causal=causal, window=window,
+                            exp_fn=exp_fn)
+
+
 # ---------------------------------------------------------------------------
 # MLPs
 
@@ -408,11 +539,9 @@ def _fused_mlp_hidden(cfg: ModelConfig, params, x, plan):
     spec = plan.get(key)
     if spec is None or spec.impl != "fused":
         return None
-    from repro.distributed.sharding import _ACTIVE
     from repro.kernels import fused
 
-    rules = _ACTIVE.get()
-    if rules is not None and rules.mesh is not None and rules.mesh.size > 1:
+    if sfu.mesh_blocks_fused(key):
         return None
     table = plan.fused_table(key)
     if table is None:
@@ -491,6 +620,7 @@ def attention_layer(
     B, S, D = x.shape
     H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     dtype = x.dtype
+    plan = plan if plan is not None else sfu.plan_for(cfg)
     exp_fn = resolve_exp(cfg, plan)
     window = cfg.sliding_window if kind == "attn_local" else None
 
@@ -546,20 +676,30 @@ def attention_layer(
             valid = jnp.broadcast_to(valid, (B, T))
             k_cache = constrain(k_cache, "batch", "cache_seq", "cache_kv", None)
             v_cache = constrain(v_cache, "batch", "cache_seq", "cache_kv", None)
-            y = decode_attention(q, k_cache, v_cache, valid, exp_fn)
+            # decode materializes the dense score tensor on both paths, so
+            # only the VMEM width cap applies (not the score-tensor cap,
+            # whose point is that flash avoids the allocation entirely)
+            y = decode_attention(
+                q, k_cache, v_cache, valid, exp_fn,
+                softmax_table=_softmax_fused_table(plan, width=T),
+            )
         else:
             # prefill: full causal attention over the (fresh) prefix
-            y = _flash_or_sliced(
-                cfg, q, k, v, causal=True, window=window, exp_fn=exp_fn
+            y = _attn_softmax_dispatch(
+                cfg, q, k, v, causal=True, window=window, exp_fn=exp_fn,
+                plan=plan,
             )
     else:
         new_cache = cache
         if cross_kv is not None:
-            y = flash_attention(q, k, v, causal=False, exp_fn=exp_fn,
-                                unroll=cfg.unroll_scans)
+            y = _attn_softmax_dispatch(
+                cfg, q, k, v, causal=False, window=None, exp_fn=exp_fn,
+                plan=plan,
+            )
         else:
-            y = _flash_or_sliced(
-                cfg, q, k, v, causal=True, window=window, exp_fn=exp_fn
+            y = _attn_softmax_dispatch(
+                cfg, q, k, v, causal=True, window=window, exp_fn=exp_fn,
+                plan=plan,
             )
 
     y = constrain(y, "batch", "act_seq", "act_heads", None)

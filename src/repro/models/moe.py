@@ -43,15 +43,35 @@ def moe_layer(cfg: ModelConfig, params, x, plan=None):
     The expert activation resolves through the activation plan (site
     ``"moe.expert:<activation>"``).  Chooses the shard_map expert-parallel
     path when an active Rules context provides a mesh with a non-trivial
-    "model" axis and E divides it."""
+    "model" axis and E divides it.
+
+    Sites planned ``impl="fused"`` run the expert gate/up gemms + PWL
+    activation + gating as ONE Pallas kernel (``kernels/fused/moe.py``) on
+    a single device; multi-device meshes fall back to the unfused einsums
+    (GSPMD cannot partition a pallas_call — per-shard fused dispatch inside
+    shard_map is a ROADMAP item) and say so once via
+    ``sfu.warn_fused_fallback``."""
     plan = plan if plan is not None else sfu.plan_for(cfg)
-    act = plan.act(sfu.site_key(sfu.SITE_MOE, cfg.activation))
+    key = sfu.site_key(sfu.SITE_MOE, cfg.activation)
+    spec = plan.get(key)
+    planned_fused = spec is not None and spec.impl == "fused"
     rules = _ACTIVE.get()
     if rules is not None and rules.mesh is not None:
         tp = dict(rules.mesh.shape).get("model", 1)
         if tp > 1 and cfg.n_experts % tp == 0:
-            return _moe_layer_shardmap(cfg, params, x, rules, act)
-    return _moe_layer_local(cfg, params, x, act)
+            if planned_fused:
+                sfu.warn_fused_fallback(
+                    key, "expert-parallel shard_map path is active; "
+                    "per-shard fused dispatch is a ROADMAP item"
+                )
+            return _moe_layer_shardmap(cfg, params, x, rules, plan.act(key))
+    fused_table = None
+    if planned_fused and not sfu.mesh_blocks_fused(key):
+        fused_table = plan.fused_table(key)
+    # the elementwise callable is only resolved (table fetch and all) on the
+    # path that actually consumes it
+    act = None if fused_table is not None else plan.act(key)
+    return _moe_layer_local(cfg, params, x, act, fused_table=fused_table)
 
 
 def _moe_layer_shardmap(cfg: ModelConfig, params, x, rules, act):
@@ -91,12 +111,15 @@ def _moe_layer_shardmap(cfg: ModelConfig, params, x, rules, act):
     return run(x, {k: params[k] for k in pspecs})
 
 
-def _moe_layer_local(cfg: ModelConfig, params, x, act):
-    y, aux = _moe_local_dispatch(cfg, params, x, act, ep_axis=None)
+def _moe_layer_local(cfg: ModelConfig, params, x, act, fused_table=None):
+    y, aux = _moe_local_dispatch(
+        cfg, params, x, act, ep_axis=None, fused_table=fused_table
+    )
     return y, aux
 
 
-def _moe_local_dispatch(cfg: ModelConfig, params, x, act, ep_axis, ep_size: int = 1):
+def _moe_local_dispatch(cfg: ModelConfig, params, x, act, ep_axis,
+                        ep_size: int = 1, fused_table=None):
     """Token-choice dispatch on the LOCAL token shard.  With ep_axis set, the
     expert dim is distributed over that mesh axis via all_to_all."""
     B, S, D = x.shape
@@ -143,9 +166,19 @@ def _moe_local_dispatch(cfg: ModelConfig, params, x, act, ep_axis, ep_size: int 
     buf = buf.at[local_e, safe_pos].add(contrib, mode="drop")
 
     # --- expert FFN on local experts ---
-    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(dtype))
-    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(dtype))
-    h = act(g) * u
+    if fused_table is not None:
+        # fused path: both gemms + PWL activation + gating in one Pallas
+        # kernel — the (E, C, F) pre-activations never round-trip HBM
+        from repro.kernels import fused
+
+        h = fused.fused_moe_glu(
+            buf, params["w_gate"].astype(dtype), params["w_up"].astype(dtype),
+            table=fused_table,
+        )
+    else:
+        g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(dtype))
+        u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(dtype))
+        h = act(g) * u
     out = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(dtype))
 
     # --- combine: partial outputs for local tokens, psum across EP ranks ---

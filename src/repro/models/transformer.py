@@ -7,6 +7,13 @@ MoE (olmoe/phi3.5), SSM (mamba2), and hybrid (jamba): the config's
 (jamba's 1-attn:7-mamba, gemma3's 5-local:1-global) still compile as one
 compact scanned HLO with stacked weights.
 
+The compiled activation plan (``sfu.plan_for(cfg)``, one per trace) is
+threaded through every block: sites planned ``impl="fused"`` run their PWL
+tables as Pallas producer-kernel epilogues — dense MLPs (``layers.mlp``),
+MoE expert FFNs (``moe.moe_layer``), and the attention softmax
+(``layers._attn_softmax_dispatch`` / ``decode_attention``, paper Sec. V-B)
+— with warn-once unfused fallbacks where fused execution is impossible.
+
 API (all pure functions over a params pytree):
   model_defs(cfg)                          -> ParamDef tree
   forward(cfg, params, tokens, ...)        -> logits           (teacher forcing)

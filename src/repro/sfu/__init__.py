@@ -46,6 +46,7 @@ Legacy configs keep working: ``compile_plan`` translates the old knobs, and
 ``DeprecationWarning`` and delegates here.
 """
 from .plan import (
+    FUSED_SITES,
     SITE_MLP,
     SITE_MOE,
     SITE_SOFTMAX,
@@ -54,10 +55,13 @@ from .plan import (
     compile_plan,
     dump_plan,
     load_plan,
+    mesh_blocks_fused,
     model_sites,
     plan_for,
+    reset_fused_fallback_warnings,
     resolve_spec,
     site_key,
+    warn_fused_fallback,
 )
 from .spec import (
     DEFAULT_FIT,
@@ -94,4 +98,8 @@ __all__ = [
     "SITE_MOE",
     "SITE_SSM",
     "SITE_SOFTMAX",
+    "FUSED_SITES",
+    "warn_fused_fallback",
+    "reset_fused_fallback_warnings",
+    "mesh_blocks_fused",
 ]

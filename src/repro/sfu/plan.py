@@ -14,17 +14,29 @@ and a later job can reload it (``dump_plan`` / ``load_plan``).
 
 Site vocabulary (one entry per *approximation context*, not per layer):
 
-  ``mlp``          dense FFN activation (fusable: GLU / linear epilogue)
-  ``moe.expert``   MoE expert FFN activation (expert einsum, unfused today)
-  ``ssm``          Mamba2 conv/gate SiLU and dt softplus
-  ``attn.softmax`` PWL-exp inside softmax (paper Sec. V-B)
+  ``mlp``          dense FFN activation (fused: GLU / linear epilogue)
+  ``moe.expert``   MoE expert FFN activation (fused: per-expert GLU epilogue)
+  ``ssm``          Mamba2 conv/gate SiLU and dt softplus (no fused producer)
+  ``attn.softmax`` PWL-exp inside softmax (paper Sec. V-B; fused: dense
+                   PWL-exp softmax kernel)
+
+Every site except ``ssm`` has a fused producer kernel (``kernels/fused/``),
+so ``impl="fused"`` is executable plan intent for all of them; a site that
+cannot actually run fused at dispatch time (no producer kernel, multi-device
+mesh, shapes past the dense-softmax cap) falls back to the unfused jnp PWL
+evaluation and reports it through :func:`warn_fused_fallback` — once per
+site, not per call.
 
 Legacy-knob translation (:func:`compile_plan` on a config that only sets
 ``act_impl``/``act_breakpoints``/``pwl_exempt``/``pwl_breakpoint_overrides``)
-reproduces the historical resolution byte-for-byte: exemption and override
-keys match a bare function name (``"silu"``, every site) or a site-qualified
-name (``"ssm:silu"``); overrides apply last-match-wins; the softmax-exp site
+reproduces the historical resolution: exemption and override keys match a
+bare function name (``"silu"``, every site) or a site-qualified name
+(``"ssm:silu"``); overrides apply last-match-wins; the softmax-exp site
 ignores ``pwl_exempt``/overrides exactly as ``layers.resolve_exp`` did.
+Configs may additionally pin sites explicitly via
+``ModelConfig.act_site_specs`` — ``((site_key, ApproxSpec), ...)`` — the
+plan-native replacement for the legacy string knobs (applied last,
+last-match-wins).
 """
 from __future__ import annotations
 
@@ -33,6 +45,7 @@ import functools
 import hashlib
 import json
 import pathlib
+import warnings
 from typing import Callable, Iterator, Optional
 
 from repro.core import functions as F
@@ -49,9 +62,63 @@ SITE_MOE = "moe.expert"
 SITE_SSM = "ssm"
 SITE_SOFTMAX = "attn.softmax"
 
+# sites with a fused producer kernel in kernels/fused/ (mlp -> linear/glu,
+# moe.expert -> per-expert glu, attn.softmax -> dense PWL-exp softmax)
+FUSED_SITES = (SITE_MLP, SITE_MOE, SITE_SOFTMAX)
+
 
 def site_key(site: str, fn: str) -> str:
     return f"{site}:{fn}"
+
+
+# ---------------------------------------------------------------------------
+# fused-fallback reporting: a site planned impl="fused" that cannot run fused
+# (no producer kernel, multi-device mesh, dense-softmax size cap) must say so
+# exactly once — silent fallbacks hide perf regressions, per-call warnings
+# drown the log on scanned layers.
+
+_FALLBACK_WARNED: set[str] = set()
+
+
+def warn_fused_fallback(key: str, reason: str) -> None:
+    """Warn (once per site key, process-wide) that a fused-planned site is
+    taking the unfused PWL path.  Dispatch points (``models/layers.py``,
+    ``models/moe.py``) call this with the concrete reason; only the first
+    reason per site is reported."""
+    if key in _FALLBACK_WARNED:
+        return
+    _FALLBACK_WARNED.add(key)
+    warnings.warn(
+        f"activation site '{key}' is planned impl='fused' but is falling "
+        f"back to the unfused PWL path: {reason}",
+        stacklevel=2,
+    )
+
+
+def reset_fused_fallback_warnings() -> None:
+    """Clear the warn-once state (tests)."""
+    _FALLBACK_WARNED.clear()
+
+
+def mesh_blocks_fused(key: str) -> bool:
+    """True when an active multi-device mesh prevents fused (Pallas)
+    dispatch for `key` — GSPMD cannot partition a ``pallas_call``, and the
+    unfused path's sharding constraints are worth more than the fusion.
+    The ONE predicate every fused dispatch point consults (MLP, MoE expert,
+    softmax), so the condition and its warn-once message cannot diverge
+    between sites; per-shard fused dispatch via shard_map is the ROADMAP
+    item that will retire it."""
+    from repro.distributed.sharding import _ACTIVE
+
+    rules = _ACTIVE.get()
+    if rules is not None and rules.mesh is not None and rules.mesh.size > 1:
+        warn_fused_fallback(
+            key, "multi-device mesh is active (GSPMD cannot partition a "
+            "pallas_call; per-shard fused dispatch via shard_map is a "
+            "ROADMAP item)"
+        )
+        return True
+    return False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,8 +159,16 @@ class ActivationPlan:
         """Elementwise activation callable for a site (the plan analogue of
         ``registry.resolve_for``).  ``impl="fused"`` sites resolve to the
         unfused jnp evaluation — that is their elementwise *fallback*; the
-        fused dispatch itself goes through :meth:`fused_table`."""
-        return resolve_spec(self.spec(key), store)
+        fused dispatch itself goes through :meth:`fused_table`.  A fused
+        spec on a site with no fused producer kernel at all (``ssm``) can
+        only ever run unfused, so it warns once here."""
+        spec = self.spec(key)
+        if spec.impl == "fused" and key.split(":", 1)[0] not in FUSED_SITES:
+            warn_fused_fallback(
+                key, "no fused producer kernel covers this site; evaluating "
+                "the PWL table elementwise (impl='jnp' semantics)"
+            )
+        return resolve_spec(spec, store)
 
     def fused_table(self, key: str, store: Optional[TableStore] = None) -> Optional[pwl.PWLTable]:
         """Table for the fused-epilogue path, or None when the producing
@@ -195,9 +270,17 @@ def _site_spec(cfg, site: str, fn: str, dtype: str) -> ApproxSpec:
         )
     n_bp = cfg.act_breakpoints
     if site == SITE_SOFTMAX:
-        # legacy resolve_exp: active iff pwl_softmax and mode != exact;
-        # always the jnp evaluation; never exempted or overridden.
-        impl = "exact" if act_impl == "exact" else "jnp"
+        # legacy resolve_exp semantics: active iff pwl_softmax and mode !=
+        # exact; never exempted or overridden.  Under "pwl_fused" the site
+        # now compiles to the fused dense PWL-exp softmax kernel
+        # (kernels/fused/softmax.py); other PWL modes keep the jnp
+        # evaluation inside the flash online softmax.
+        if act_impl == "exact":
+            impl = "exact"
+        elif act_impl == "pwl_fused":
+            impl = "fused"
+        else:
+            impl = "jnp"
         return ApproxSpec(fn=fn, n_segments=n_bp + 1, dtype=dtype, impl=impl,
                           fit=DEFAULT_FIT)
 
@@ -209,10 +292,10 @@ def _site_spec(cfg, site: str, fn: str, dtype: str) -> ApproxSpec:
     if exempt or act_impl == "exact":
         impl = "exact"
     elif act_impl == "pwl_fused":
-        # only the dense-MLP site has a fused producer kernel today; other
-        # sites run the unfused jnp evaluation (the plan records the
-        # fallback statically instead of re-deriving it per call)
-        impl = "fused" if site == SITE_MLP else "jnp"
+        # sites with a fused producer kernel compile to fused intent; the
+        # SSM gates have none, so the plan records their unfused fallback
+        # statically instead of re-deriving it per call
+        impl = "fused" if site in FUSED_SITES else "jnp"
     else:
         impl = LEGACY_IMPL[act_impl]
     return ApproxSpec(fn=fn, n_segments=n_bp + 1, dtype=dtype, impl=impl,
@@ -224,19 +307,40 @@ def compile_plan(cfg) -> ActivationPlan:
 
     Accepts both legacy stringly-typed configs (``act_impl`` + exemption /
     override tuples) and new-style configs that additionally set
-    ``act_table_dtype``.  A config carrying an explicit ``act_plan`` is
-    returned as-is — the plan is the source of truth.
+    ``act_table_dtype``.  Precedence (highest first):
+
+      1. ``cfg.act_plan`` — an explicit ActivationPlan is returned as-is;
+      2. ``cfg.act_site_specs`` — explicit ``((site_key, ApproxSpec), ...)``
+         per-site pins, applied last-match-wins over the translation below
+         (the plan-native replacement for ``pwl_exempt`` /
+         ``pwl_breakpoint_overrides``);
+      3. legacy-knob translation of ``act_impl`` & friends.
     """
     explicit = getattr(cfg, "act_plan", None)
     if explicit is not None:
         return explicit
     dtype = getattr(cfg, "act_table_dtype", "f32")
-    return ActivationPlan(
-        sites=tuple(
-            (site_key(site, fn), _site_spec(cfg, site, fn, dtype))
-            for site, fn in model_sites(cfg)
+    pins = tuple(getattr(cfg, "act_site_specs", ()) or ())
+    sites = []
+    matched: set[str] = set()
+    for site, fn in model_sites(cfg):
+        key = site_key(site, fn)
+        spec = _site_spec(cfg, site, fn, dtype)
+        for pin_key, pin_spec in pins:
+            if pin_key == key:
+                spec = pin_spec
+                matched.add(pin_key)
+        sites.append((key, spec))
+    unmatched = [k for k, _ in pins if k not in matched]
+    if unmatched:
+        # fail fast: a silently dropped pin would undo exactly the
+        # accuracy-critical exemption it exists to enforce (a typo'd key,
+        # or "attn.softmax:exp" pinned without pwl_softmax=True)
+        raise ValueError(
+            f"act_site_specs keys {unmatched} match no activation site this "
+            f"config instantiates; sites: {[k for k, _ in sites]}"
         )
-    )
+    return ActivationPlan(sites=tuple(sites))
 
 
 @functools.lru_cache(maxsize=512)
