@@ -1,0 +1,186 @@
+"""Fused flash-attention (PWL-exp online softmax) vs jnp flash vs dense.
+
+The attention sibling of ``bench_fused_mlp.py`` / ``bench_fused_moe.py``
+(ISSUE 5): long-context prefill cells (causal and sliding-window) timed
+under the three executors of a fused-planned ``attn.softmax:`` site —
+
+  * ``fused_flash``  — the blocked Pallas flash kernel whose online softmax
+                       (shifted-score exp AND correction factor) runs
+                       through the non-uniform PWL decode
+                       (kernels/fused/attention.py);
+  * ``jnp_flash``    — the pure-JAX lax.scan flash formulation with the
+                       elementwise PWL exp (the path fused_flash retired);
+  * ``dense_fused``  — the dense PWL-exp softmax kernel
+                       (kernels/fused/softmax.py), the small-problem fast
+                       path; cells outside its score-cap / width / window
+                       envelope record ``supported: false``.
+
+Each cell reports latency and output MSE vs EXACT softmax attention (the
+jnp flash path with the true exponential), so the table shows both the
+fusion win and the approximation cost.  Emits CSV rows via
+benchmarks/common.py AND machine-readable ``BENCH_fused_attention.json``
+at the repo root: per-cell mode rows plus a coverage/MSE summary
+(``fused_flash`` must cover >= ``dense_fused`` and stay within 2x of its
+MSE — the ISSUE 5 acceptance bar).
+
+    PYTHONPATH=src python benchmarks/bench_fused_attention.py [--quick]
+
+Note: on CPU the Pallas paths run in interpret mode — latency numbers are
+only meaningful on TPU, and --quick scales the sequence lengths down
+(support flags are still evaluated against the NOMINAL cell shapes, so the
+coverage summary describes the paper-scale dispatch policy).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro  # noqa: F401
+from repro import sfu
+from repro.kernels import fused
+from repro.models import layers
+
+DEFAULT_OUT = (
+    pathlib.Path(__file__).resolve().parent.parent / "BENCH_fused_attention.json"
+)
+
+try:  # package-style (python -m benchmarks.run) or script-style invocation
+    from .common import emit, time_fn
+except ImportError:
+    from common import emit, time_fn
+
+# nominal prefill cells (ISSUE 5): causal and window=256 at S in {1k, 4k, 16k}
+NOMINAL_S = (1024, 4096, 16384)
+NOMINAL_WINDOW = 256
+B, H, HKV, DH = 1, 4, 2, 64
+
+
+def make_attn(mode: str, table, window):
+    if mode == "fused_flash":
+        @jax.jit
+        def attn(q, k, v):
+            return fused.fused_flash_attention(
+                q, k, v, table=table, causal=True, window=window
+            )
+    elif mode == "jnp_flash":
+        exp_fn = layers.pwl_exp_fn(table)  # the production elementwise exp
+
+        @jax.jit
+        def attn(q, k, v):
+            return layers.flash_attention(
+                q, k, v, causal=True, window=window, exp_fn=exp_fn
+            )
+    elif mode == "dense_fused":
+        @jax.jit
+        def attn(q, k, v):
+            return layers.dense_pwl_attention(
+                q, k, v, table=table, causal=True, window=window
+            )
+    else:  # exact oracle
+        @jax.jit
+        def attn(q, k, v):
+            return layers.flash_attention(
+                q, k, v, causal=True, window=window, exp_fn=jnp.exp
+            )
+    return attn
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="tiny shapes (CI smoke)")
+    ap.add_argument("--breakpoints", type=int, default=32)
+    ap.add_argument("--out", default=str(DEFAULT_OUT),
+                    help="machine-readable results JSON path")
+    # parse_known_args: tolerate the runner's own flags (benchmarks/run.py)
+    args, _ = ap.parse_known_args(argv)
+
+    if jax.default_backend() == "cpu" and not args.quick:
+        print("# cpu backend: forcing --quick shapes (interpret mode)")
+        args.quick = True
+    iters = 3 if args.quick else 10
+    # interpret mode cannot execute 16k dense scores in reasonable time;
+    # quick scales every S down but keeps the nominal cell identity (and the
+    # dispatch-support flags are always computed at the NOMINAL shape)
+    scale = 32 if args.quick else 1
+
+    table = sfu.get_store().get(fn="exp", n_breakpoints=args.breakpoints)
+    dtype = jnp.float32 if jax.default_backend() == "cpu" else jnp.bfloat16
+
+    cells = [(s, None) for s in NOMINAL_S] + [(s, NOMINAL_WINDOW) for s in NOMINAL_S]
+    print(f"# backend={jax.default_backend()} B={B} H={H} Hkv={HKV} dh={DH} "
+          f"breakpoints={args.breakpoints} quick={args.quick}")
+    results = []
+    for s_nom, w_nom in cells:
+        s_run = max(128, s_nom // scale)
+        w_run = None if w_nom is None else max(8, w_nom // scale)
+        kq, kk, kv = jax.random.split(jax.random.PRNGKey(s_nom + (w_nom or 0)), 3)
+        q = jax.random.normal(kq, (B, s_run, H, DH), dtype)
+        k = jax.random.normal(kk, (B, s_run, HKV, DH), dtype)
+        v = jax.random.normal(kv, (B, s_run, HKV, DH), dtype)
+        y_exact = make_attn("exact", table, w_run)(q, k, v).astype(jnp.float32)
+
+        # support at the NOMINAL shape, via the real dispatch predicate
+        dense_ok = layers._dense_softmax_preferred(
+            B * H * s_nom * s_nom, s_nom, w_nom, s_nom
+        )
+        cell = {"S": s_nom, "window": w_nom, "S_run": s_run,
+                "window_run": w_run, "modes": {}}
+        for mode in ("fused_flash", "jnp_flash", "dense_fused"):
+            supported = dense_ok if mode == "dense_fused" else True
+            row = {"supported": supported}
+            if supported:
+                fn = make_attn(mode, table, w_run)
+                us = time_fn(fn, q, k, v, warmup=1 if args.quick else 2,
+                             iters=iters)
+                y = fn(q, k, v).astype(jnp.float32)
+                row["us_per_call"] = round(us, 2)
+                row["mse_vs_exact"] = float(jnp.mean((y - y_exact) ** 2))
+                emit(f"attn_S{s_nom}_{'causal' if w_nom is None else f'w{w_nom}'}"
+                     f"_{mode}", us, f"mse={row['mse_vs_exact']:.3e}")
+            else:
+                emit(f"attn_S{s_nom}_{'causal' if w_nom is None else f'w{w_nom}'}"
+                     f"_{mode}", 0.0, "unsupported_dense_envelope")
+            cell["modes"][mode] = row
+        results.append(cell)
+
+    coverage = {
+        m: sum(1 for c in results if c["modes"][m]["supported"])
+        for m in ("fused_flash", "jnp_flash", "dense_fused")
+    }
+    shared = [c for c in results if c["modes"]["dense_fused"]["supported"]]
+    mse_ratios = [
+        c["modes"]["fused_flash"]["mse_vs_exact"]
+        / max(c["modes"]["dense_fused"]["mse_vs_exact"], 1e-30)
+        for c in shared
+    ]
+    payload = {
+        "benchmark": "fused_attention",
+        "backend": jax.default_backend(),
+        "interpret_mode": jax.default_backend() != "tpu",
+        "unix_time": int(time.time()),
+        "shape": {"batch": B, "heads": H, "kv_heads": HKV, "head_dim": DH,
+                  "dtype": str(jnp.dtype(dtype))},
+        "breakpoints": args.breakpoints,
+        "quick": bool(args.quick),
+        "cells": results,
+        "summary": {
+            "coverage": coverage,
+            "fused_flash_covers_dense": coverage["fused_flash"]
+            >= coverage["dense_fused"],
+            "mse_ratio_fused_flash_vs_dense_max": (
+                max(mse_ratios) if mse_ratios else None
+            ),
+        },
+    }
+    out = pathlib.Path(args.out)
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# results -> {out}")
+
+
+if __name__ == "__main__":
+    main()

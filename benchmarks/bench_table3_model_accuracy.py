@@ -52,21 +52,23 @@ def main() -> None:
             print(f"{arch},{tag},{delta:.4f},{kl:.3e},{agree:.4f}", flush=True)
 
         for n_bp in BPS:
-            # paper-faithful: EVERY activation swapped (no exemptions)
+            # paper-faithful: EVERY activation swapped — clear the shipped
+            # act_site_specs pins (mamba2/jamba keep ssm:silu exact by default)
             report(
                 f"{n_bp}",
                 get_reduced_config(
                     arch, act_impl="pwl", act_breakpoints=n_bp,
-                    dtype=jnp.float32, pwl_exempt=(),
+                    dtype=jnp.float32, act_site_specs=(),
                 ),
             )
         if cfg_e.family in ("ssm", "hybrid"):
-            # mitigation: SSM-input SiLU exact (the production default)
+            # mitigation: SSM-input SiLU exact — the production default pin
+            # the shipped configs carry in act_site_specs
             report(
                 "32+ssm-exempt",
                 get_reduced_config(
                     arch, act_impl="pwl", act_breakpoints=32,
-                    dtype=jnp.float32, pwl_exempt=("ssm:silu",),
+                    dtype=jnp.float32,
                 ),
             )
 

@@ -23,6 +23,7 @@ BENCHMARKS = [
     ("table3_model_accuracy", "benchmarks.bench_table3_model_accuracy"),
     ("fused_mlp", "benchmarks.bench_fused_mlp"),
     ("fused_moe", "benchmarks.bench_fused_moe"),
+    ("fused_attention", "benchmarks.bench_fused_attention"),
     ("roofline", "benchmarks.bench_roofline"),
 ]
 

@@ -24,7 +24,16 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dry", action="store_true",
                     help="fast API-surface smoke (skip the SGD fit + model run)")
+    ap.add_argument("--plan", default=None, metavar="PATH",
+                    help="use an ActivationPlan JSON (repro.sfu) for the "
+                    "plan/model steps instead of compiling one from the "
+                    "repro-100m config")
+    # removed flag, kept one release as a hard error with a pointer
+    ap.add_argument("--act-impl", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
+    if args.act_impl is not None:
+        ap.error("--act-impl was removed: pass --plan <plan.json> instead "
+                 "(see docs/plans.md)")
 
     spec = F.get("gelu")
 
@@ -61,13 +70,24 @@ def main(argv=None):
     err = pwl.mse(t_bf16, spec, -8, 8)
     print(f"bf16 32-bp table MSE on [-8,8]:    {err:.3e}")
 
-    # 4. the plan API: compile a per-site ActivationPlan from a model config,
-    #    dump the exact plan as JSON (what serve/dryrun runs record), reload
+    # 4. the plan API: compile a per-site ActivationPlan from a model config
+    #    (or load one from JSON via --plan), dump the exact plan as JSON
+    #    (what serve/dryrun runs record), reload
     from repro.configs.repro_100m import reduced
 
-    cfg100m = dataclasses.replace(reduced(), act_impl="pwl_fused")
-    plan = sfu.compile_plan(cfg100m)
-    print(f"compiled plan {plan.fingerprint}:")
+    if args.plan:
+        plan = sfu.load_plan(args.plan)
+        missing = sfu.plan_missing_sites(reduced(), plan)
+        if missing:
+            ap.error(f"--plan {args.plan} lacks specs for activation sites "
+                     f"{missing} that repro-100m instantiates — dump one "
+                     "from a repro-100m config (e.g. serve.py --arch "
+                     "repro-100m --dump-plan)")
+        print(f"loaded plan {plan.fingerprint} from {args.plan}:")
+    else:
+        cfg100m = dataclasses.replace(reduced(), act_impl="pwl_fused")
+        plan = sfu.compile_plan(cfg100m)
+        print(f"compiled plan {plan.fingerprint}:")
     for key, s in plan.items():
         print(f"  {key:24s} -> impl={s.impl} segments={s.n_segments} dtype={s.dtype}")
     blob = plan.dumps()
@@ -76,7 +96,8 @@ def main(argv=None):
 
     # 5. the model path: sites planned impl="fused" evaluate PWL activations
     #    as epilogues INSIDE the MLP gemms (kernels/fused/) — one HBM pass
-    #    for matmul + activation + gating instead of three.
+    #    for matmul + activation + gating instead of three.  With --plan the
+    #    fused run executes that exact loaded plan.
     if not args.dry:
         from repro.models import Model
 
@@ -85,12 +106,21 @@ def main(argv=None):
             "tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, vocab),
             "targets": jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, vocab),
         }
+        fused_cfg = (
+            dataclasses.replace(reduced(), act_plan=plan, dtype=jnp.float32)
+            if args.plan
+            else dataclasses.replace(reduced(), act_impl="pwl_fused",
+                                     dtype=jnp.float32)
+        )
         logits = {}
-        for impl in ("pwl", "pwl_fused"):
-            cfg = dataclasses.replace(reduced(), act_impl=impl, dtype=jnp.float32)
+        for tag, cfg in (
+            ("pwl", dataclasses.replace(reduced(), act_impl="pwl",
+                                        dtype=jnp.float32)),
+            ("pwl_fused", fused_cfg),
+        ):
             model = Model(cfg)
             params = model.init(jax.random.PRNGKey(0))
-            logits[impl], _ = model.forward(params, batch)
+            logits[tag], _ = model.forward(params, batch)
         err = float(jnp.max(jnp.abs(logits["pwl_fused"] - logits["pwl"])))
         print(f"model logits max |pwl_fused - pwl| (repro-100m reduced): {err:.2e}")
 

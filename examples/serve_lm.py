@@ -8,5 +8,7 @@ from repro.launch.serve import serve
 
 
 if __name__ == "__main__":
+    # the default serving plan is jnp PWL; pass --plan <plan.json> to serve
+    # an explicit approximation plan (see docs/plans.md)
     sys.exit(serve(["--arch", "repro-100m", "--batch", "4", "--prompt-len", "32",
-                    "--max-new", "16", "--act-impl", "pwl"]))
+                    "--max-new", "16"]))

@@ -11,7 +11,11 @@ kernel that produced the pre-activation.  This package provides:
   moe       — fused per-expert GLU: act(x[e] @ Wg[e]) * (x[e] @ Wu[e])
               (the MoE expert-FFN hot path, expert dim as outer grid axis)
   softmax   — fused PWL-exp softmax: row-max subtract, PWL exp, renormalize
-              in one resident pass (paper Sec. V-B)
+              in one resident pass (paper Sec. V-B) — the small-problem
+              dense path
+  attention — blocked flash attention whose ONLINE softmax exp (shifted
+              scores and correction factor) runs through the PWL decode —
+              the long-sequence / sliding-window attention hot path
   norm      — fused RMSNorm (+ optional activation epilogue)
 
 Models opt in through their activation plan: sites compiled with
@@ -33,6 +37,7 @@ from .epilogue import (  # noqa: F401
     pwl_value_and_slope_tile,
     table_dtype_name,
 )
+from .attention import fused_flash_attention  # noqa: F401
 from .glu import fused_glu  # noqa: F401
 from .linear import fused_linear  # noqa: F401
 from .moe import fused_moe_glu  # noqa: F401

@@ -1,0 +1,353 @@
+"""Fused flash attention with a PWL-exp online softmax (paper Sec. V-B).
+
+The dense PWL-exp softmax kernel (``fused/softmax.py``) materializes the
+full score tensor, so long-sequence prefill and narrow sliding windows used
+to fall back to a pure-JAX ``lax.scan`` flash formulation with an
+*elementwise* PWL exp — the last structural fallback on the
+``attn.softmax:`` plan site.  This kernel removes it: a blocked Pallas
+flash-attention forward whose **online softmax runs entirely through the
+non-uniform PWL decode** — both the shifted-score exponential and the
+running-max correction factor evaluate ``fused/epilogue.pwl_eval_tile`` on
+the resident tile, exactly the datapath the Flex-SFU ASIC puts beside the
+MAC array.
+
+Structure (the classic flash tiling, cf. the dense kernel's row blocks):
+
+* grid ``(B * Hkv * G, S/bq, T/bkv)`` with the KV axis innermost — TPU
+  grids iterate minor-to-major sequentially, so the f32 running-max /
+  row-sum / output accumulators live in VMEM scratch across KV steps of
+  each (head, q-block) cell;
+* GQA folds the query heads as ``(Hkv major, G minor)`` — the same split
+  as ``models/layers.flash_attention`` — and the K/V block index maps
+  ``b -> b // G`` so grouped queries share their KV head's tiles;
+* causal and sliding-window masks are synthesized **in-kernel from iotas**
+  (same approach as ``fused/softmax.py``); KV blocks that are entirely
+  above the causal diagonal or entirely left of the window are skipped
+  outright (no matmul, no decode);
+* ragged decode caches (the serve path) mask via a per-batch
+  ``kv_valid_len`` operand — validity in this codebase is always a prefix
+  of the cache (ring buffers are full-or-prefix), so a length is enough;
+* per flash step, in f32 on the resident tile:
+
+      s      = (q @ k^T) * scale           (masked to -1e30)
+      m_new  = max(m_prev, rowmax(s))
+      p      = max(PWL_exp(clamp(s - m_new)), 0) * mask
+      corr   = max(PWL_exp(clamp(m_prev - m_new)), 0)
+      l_new  = l_prev * corr + rowsum(p)
+      acc    = acc * corr + p @ v
+
+  With the exact exponential this telescopes to softmax; with the PWL
+  table the correction chain is the *same* approximation the jnp flash
+  path applies (``layers._chunk_attn_block`` runs ``exp_fn`` on both the
+  shifted scores and the correction), so the kernel reproduces the
+  formulation it replaces — one resident pass instead of a scan of
+  elementwise exp round-trips.
+
+The backward pass is a custom VJP with a pure-jnp *dense* recompute:
+scores are rematerialized with einsums and pushed through
+``pwl_softmax_reference`` (the same oracle the dense softmax kernel
+autodiffs through), matching the recompute discipline of ``fused/moe.py``.
+The recompute materializes the (B, G, Hkv, S, T) score tensor per layer —
+the same O(S*T) order the jnp flash path's backward pays (autodiff of its
+nested ``lax.scan`` stacks the per-block s/p/corr residuals across steps),
+so differentiated memory is no worse than the path this kernel replaces,
+but a truly blocked two-pass flash backward is the ROADMAP item that would
+cut both.
+
+Masked/padded rows (no valid key) return zeros, not NaN.  Clamps mirror
+``fused/softmax.py``: masked fills use ``-1e30`` before the row max, and
+shifted scores clamp at ``-1e4`` so narrow-format tables cannot overflow
+their linear left tail (the exp table's left slope is exactly 0, so any
+clamp below the fit range decodes to the same value).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.pwl import PWLTable
+
+from .._backend import should_interpret
+from .epilogue import EpiloguePlan, plan_and_operands
+from .linear import _round_up
+from .softmax import _NEG_FILL, _SHIFT_CLAMP, pwl_softmax_reference
+
+# default flash tile sizes: bq x bkv f32 score tile (256*512*4 = 512 KiB)
+# plus q/k/v/acc tiles comfortably inside the VMEM budget at dh <= 256
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_KV = 512
+
+
+def _flash_kernel(*refs, plan: EpiloguePlan, nkv: int, scale: float,
+                  kv_len: int, causal: bool, window, q_offset: int,
+                  has_valid: bool):
+    n_tab = plan.n_operands
+    q_ref, k_ref, v_ref = refs[0], refs[1], refs[2]
+    off = 3 + (1 if has_valid else 0)
+    vl_ref = refs[3] if has_valid else None
+    tab_refs = refs[off: off + n_tab]
+    o_ref = refs[off + n_tab]
+    m_ref, l_ref, acc_ref = refs[off + n_tab + 1: off + n_tab + 4]
+
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    bq, bkv = q_ref.shape[1], k_ref.shape[1]
+
+    @pl.when(j == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, jnp.float32(_NEG_FILL))
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # skip KV blocks that the masks rule out entirely: causal — the block's
+    # first key is past the last query of this q block; window — the
+    # block's last key precedes every query's window start; ragged — the
+    # block starts past the cache's valid prefix (a 500k-slot decode cache
+    # holding 2k tokens runs ~4 of ~977 KV blocks).
+    should_run = jnp.bool_(True)
+    if causal:
+        should_run &= j * bkv <= (i + 1) * bq - 1 + q_offset
+    if window is not None:
+        should_run &= i * bq + q_offset - (j * bkv + bkv - 1) < window
+    if has_valid:
+        should_run &= j * bkv < vl_ref[0, 0]
+
+    @pl.when(should_run)
+    def _():
+        q = q_ref[0]  # (bq, dh)
+        k = k_ref[0]  # (bkv, dh)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale
+        qpos = (i * bq + q_offset
+                + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0))
+        kpos = j * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        keep = kpos < kv_len  # KV padding
+        if causal:
+            keep &= kpos <= qpos
+        if window is not None:
+            keep &= (qpos - kpos) < window
+        if has_valid:
+            keep &= kpos.astype(jnp.float32) < vl_ref[0, 0]
+        keepf = keep.astype(jnp.float32)
+        s = jnp.where(keep, s, jnp.float32(_NEG_FILL))
+
+        m_prev = m_ref[:, :1]
+        l_prev = l_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        shifted = jnp.maximum(s - m_new, jnp.float32(_SHIFT_CLAMP))
+        p = jnp.maximum(plan.apply(shifted, *tab_refs), 0.0) * keepf
+        corr = jnp.maximum(
+            plan.apply(
+                jnp.maximum(m_prev - m_new, jnp.float32(_SHIFT_CLAMP)),
+                *tab_refs,
+            ),
+            0.0,
+        )
+        l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, v_ref[0], preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == nkv - 1)
+    def _():
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[:, :1], jnp.float32(1e-30))
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "plan", "g", "causal", "window", "q_offset", "block_q", "block_kv",
+    "interpret"))
+def _fused_flash_4d(q, k, v, kv_valid_len, tables, *, plan, g, causal,
+                    window, q_offset, block_q, block_kv, interpret):
+    """q: (BHG, S, dh) f32;  k/v: (BH, T, dh) f32;
+    kv_valid_len: (BHG, 1) f32 or None.  Returns (BHG, S, dh) f32."""
+    BHG, S, dh = q.shape
+    T = k.shape[1]
+    bq = min(block_q, _round_up(S, 8))
+    bkv = min(block_kv, _round_up(T, 128))
+    dhp = _round_up(dh, 128)
+    qp = jnp.pad(q, ((0, 0), (0, _round_up(S, bq) - S), (0, dhp - dh)))
+    kp = jnp.pad(k, ((0, 0), (0, _round_up(T, bkv) - T), (0, dhp - dh)))
+    vp = jnp.pad(v, ((0, 0), (0, _round_up(T, bkv) - T), (0, dhp - dh)))
+    Sp, Tp = qp.shape[1], kp.shape[1]
+    nkv = Tp // bkv
+    grid = (BHG, Sp // bq, nkv)
+
+    operands = [qp, kp, vp]
+    in_specs = [
+        pl.BlockSpec((1, bq, dhp), lambda b, i, j: (b, i, 0)),
+        pl.BlockSpec((1, bkv, dhp), lambda b, i, j, _g=g: (b // _g, j, 0)),
+        pl.BlockSpec((1, bkv, dhp), lambda b, i, j, _g=g: (b // _g, j, 0)),
+    ]
+    has_valid = kv_valid_len is not None
+    if has_valid:
+        operands.append(kv_valid_len)
+        in_specs.append(pl.BlockSpec((1, 1), lambda b, i, j: (b, 0)))
+    for rows, cols in plan.table_specs():
+        in_specs.append(pl.BlockSpec((rows, cols), lambda b, i, j: (0, 0)))
+    operands.extend(tables)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, plan=plan, nkv=nkv,
+            scale=1.0 / math.sqrt(dh), kv_len=T, causal=causal,
+            window=window, q_offset=q_offset, has_valid=has_valid,
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bq, dhp), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BHG, Sp, dhp), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),   # running row max
+            pltpu.VMEM((bq, 128), jnp.float32),   # running row sum
+            pltpu.VMEM((bq, dhp), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(*operands)
+    return out[:, :S, :dh]
+
+
+def _attention_mask(S, T, causal, window, q_offset, kv_valid_len, B, Hkv, G):
+    """Materialized float mask for the dense VJP recompute — the jnp analogue
+    of the kernel's in-register iota/valid-length masking."""
+    qpos = q_offset + jnp.arange(S)
+    kpos = jnp.arange(T)
+    keep = jnp.ones((S, T), bool)
+    if causal:
+        keep &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        keep &= (qpos[:, None] - kpos[None, :]) < window
+    keep = jnp.broadcast_to(keep[None, None, None], (B, G, Hkv, S, T))
+    if kv_valid_len is not None:
+        valid = kpos[None, :].astype(jnp.float32) < kv_valid_len[:, None]
+        keep = keep & valid[:, None, None, None, :]
+    return keep.astype(jnp.float32)
+
+
+def _reference_attention(q, k, v, kv_valid_len, tables, plan, causal, window,
+                         q_offset):
+    """Dense pure-jnp oracle of the kernel math: einsum scores ->
+    ``pwl_softmax_reference`` -> einsum output.  The VJP recompute path."""
+    B, S, H, dh = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(dh)
+    qf = q.astype(jnp.float32).reshape(B, S, Hkv, G, dh).transpose(0, 3, 2, 1, 4)
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    s = jnp.einsum("bghqd,bhkd->bghqk", qf, kf,
+                   preferred_element_type=jnp.float32) * scale
+    mask = _attention_mask(S, T, causal, window, q_offset, kv_valid_len,
+                           B, Hkv, G)
+    p = pwl_softmax_reference(s, mask, tables, plan)
+    out = jnp.einsum("bghqk,bhkd->bghqd", p, vf,
+                     preferred_element_type=jnp.float32)
+    return out.transpose(0, 3, 2, 1, 4).reshape(B, S, H, dh)
+
+
+# --- autodiff: fused forward, pure-jnp dense recompute backward ------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9, 10, 11))
+def _attn_op(q, k, v, kv_valid_len, tables, plan, causal, window, q_offset,
+             block_q, block_kv, interpret):
+    B, S, H, dh = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qf = (q.astype(jnp.float32).reshape(B, S, Hkv, G, dh)
+          .transpose(0, 2, 3, 1, 4).reshape(B * Hkv * G, S, dh))
+    kf = (k.astype(jnp.float32).transpose(0, 2, 1, 3)
+          .reshape(B * Hkv, T, dh))
+    vf = (v.astype(jnp.float32).transpose(0, 2, 1, 3)
+          .reshape(B * Hkv, T, dh))
+    vl = None
+    if kv_valid_len is not None:
+        vl = jnp.broadcast_to(
+            kv_valid_len.astype(jnp.float32)[:, None, None], (B, Hkv * G, 1)
+        ).reshape(B * Hkv * G, 1)
+    out = _fused_flash_4d(
+        qf, kf, vf, vl, tables, plan=plan, g=G, causal=causal, window=window,
+        q_offset=q_offset, block_q=block_q, block_kv=block_kv,
+        interpret=interpret,
+    )
+    return (out.reshape(B, Hkv, G, S, dh).transpose(0, 3, 1, 2, 4)
+            .reshape(B, S, H, dh))
+
+
+def _attn_op_fwd(q, k, v, kv_valid_len, tables, plan, causal, window,
+                 q_offset, block_q, block_kv, interpret):
+    y = _attn_op(q, k, v, kv_valid_len, tables, plan, causal, window,
+                 q_offset, block_q, block_kv, interpret)
+    return y, (q, k, v, kv_valid_len, tables)
+
+
+def _attn_op_bwd(plan, causal, window, q_offset, block_q, block_kv,
+                 interpret, res, g):
+    q, k, v, kv_valid_len, tables = res
+    _, vjp = jax.vjp(
+        lambda qq, kk, vv: _reference_attention(
+            qq, kk, vv, kv_valid_len, tables, plan, causal, window, q_offset
+        ),
+        q, k, v,
+    )
+    dq, dk, dv = vjp(g.astype(jnp.float32))
+    dtables = jax.tree_util.tree_map(jnp.zeros_like, tables)
+    # kv_valid_len reaches the op as f32 (public wrapper casts) or None
+    dvl = None if kv_valid_len is None else jnp.zeros_like(kv_valid_len)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            dvl, dtables)
+
+
+_attn_op.defvjp(_attn_op_fwd, _attn_op_bwd)
+
+
+def fused_flash_attention(
+    q: jax.Array,  # (B, S, H, dh)
+    k: jax.Array,  # (B, T, Hkv, dh)
+    v: jax.Array,  # (B, T, Hkv, dh)
+    *,
+    table: PWLTable | None = None,
+    act: str | None = None,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    kv_valid_len: jax.Array | None = None,  # (B,) prefix length of valid KV
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_kv: int = DEFAULT_BLOCK_KV,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Flash attention with the online-softmax exp through the PWL decode.
+
+    table: PWL table for ``exp`` (the ``attn.softmax:exp`` plan site);
+           ``act="exp"`` (the default when neither is given) runs the exact
+           exponential inside the same fused online softmax.
+    causal/window: position-static masking synthesized in-kernel from iotas
+           (query positions start at ``q_offset``); fully-masked KV blocks
+           are skipped outright.
+    kv_valid_len: per-batch count of valid KV prefix positions (ragged
+           decode caches — validity must be a prefix, which ring and linear
+           caches in this codebase guarantee).
+
+    GQA: ``H`` must be a multiple of ``Hkv``; grouped queries share their
+    KV head's tiles.  Returns (B, S, H, dh) in ``q.dtype``.
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    if table is None and act is None:
+        act = "exp"
+    plan, tables = plan_and_operands(table, act)
+    if kv_valid_len is not None:
+        kv_valid_len = kv_valid_len.astype(jnp.float32)
+    y = _attn_op(q, k, v, kv_valid_len, tables, plan, causal, window,
+                 int(q_offset), block_q, block_kv, interpret)
+    return y.astype(q.dtype)

@@ -31,8 +31,19 @@ from repro.core.pwl import PWLTable
 def pwl_value_and_slope_tile(x, bp_ref, dmq_ref, n_bp: int):
     """Delta-accumulation PWL decode on one tile: (f̂(x), slope m(x)), f32.
 
-    bp_ref:  (n_bp, 1)    sorted breakpoints
-    dmq_ref: (n_bp+1, 2)  row 0 = (m_0, q_0); row i+1 = (dm_i, dq_i)
+    Two operand layouts, distinguished by the operand dtype (so the jit cache
+    and Mosaic lowering cannot confuse them):
+
+    * **f32 (delta layout)** — ``bp_ref``: (n_bp, 1) sorted breakpoints;
+      ``dmq_ref``: (n_bp+1, 2) with row 0 = (m_0, q_0) and row i+1 =
+      (dm_i, dq_i), deltas precomputed in f32 at pack time.
+    * **bf16/f16 (native layout)** — the table memories stay in their
+      storage format, mirroring the ASIC's narrow SRAMs: ``bp_ref``:
+      (n_bp, 1) narrow breakpoints; ``dmq_ref``: (n_bp+1, 2) *raw* rows
+      (m_i, q_i).  Operands are upcast in-register and the deltas are formed
+      in f32 inside the loop — bit-identical to the f32 delta layout packed
+      from the same quantized table (narrow -> f32 upcast is exact, and the
+      f32 subtract matches the pack-time one).
 
     Ordered segments mean the coefficient of the segment containing x equals
     the base coefficient plus the sum of deltas of breakpoints left of x, so
@@ -41,6 +52,17 @@ def pwl_value_and_slope_tile(x, bp_ref, dmq_ref, n_bp: int):
     (..., n_bp) one-hot).  Works on kernel refs and plain jnp arrays alike.
     """
     xf = x.astype(jnp.float32)
+    native = jnp.dtype(dmq_ref.dtype) != jnp.dtype(jnp.float32)
+    if native:
+        m = jnp.zeros_like(xf) + dmq_ref[0, 0].astype(jnp.float32)
+        q = jnp.zeros_like(xf) + dmq_ref[0, 1].astype(jnp.float32)
+        for i in range(n_bp):  # static unroll: n_bp <= 64
+            cmp = (xf > bp_ref[i, 0].astype(jnp.float32)).astype(jnp.float32)
+            m = m + cmp * (dmq_ref[i + 1, 0].astype(jnp.float32)
+                           - dmq_ref[i, 0].astype(jnp.float32))
+            q = q + cmp * (dmq_ref[i + 1, 1].astype(jnp.float32)
+                           - dmq_ref[i, 1].astype(jnp.float32))
+        return m * xf + q, m
     m = jnp.full_like(xf, dmq_ref[0, 0])
     q = jnp.full_like(xf, dmq_ref[0, 1])
     for i in range(n_bp):  # static unroll: n_bp <= 64
@@ -65,15 +87,20 @@ def table_dtype_name(table: PWLTable) -> str:
     }.get(np.asarray(table.m).dtype, "f32")
 
 
-def pack_table(table: PWLTable, dtype: str | None = None):
-    """Pack (bp, m, q) into the delta layout the tile function consumes.
+def pack_table(table: PWLTable, dtype: str | None = None,
+               native: bool | None = None):
+    """Pack (bp, m, q) into the operand layout the tile function consumes.
 
     ``dtype`` ("f32" | "bf16" | "f16", default: the table's own storage
     format) is the multi-format axis (paper Sec. III): coefficients are
-    quantized to that format, then upcast to f32 *operands* — the format
-    error lives in the table values while the tile decode keeps full-rate
-    f32 compares/FMAs, mirroring the ASIC's wide MADD accumulator reading
-    narrow table memories.
+    quantized to that format.  For narrow formats the operands then ship
+    **natively** in that format by default (``native=None``): (n_bp, 1)
+    breakpoints plus (n_bp+1, 2) raw (m_i, q_i) rows, upcast in-register by
+    :func:`pwl_value_and_slope_tile` — the kernel reads narrow table
+    memories exactly like the ASIC, while the compares/FMAs stay full-rate
+    f32.  ``native=False`` forces the legacy quantize-then-upcast packing
+    (f32 delta operands precomputed at pack time); both layouts decode
+    bit-identically.  f32 tables always use the delta layout.
     """
     import numpy as np
 
@@ -81,6 +108,16 @@ def pack_table(table: PWLTable, dtype: str | None = None):
         from repro.sfu import quantize_table
 
         table = quantize_table(table, dtype)
+    storage = table_dtype_name(table)
+    if native is None:
+        native = storage != "f32"
+    if native and storage != "f32":
+        np_dtype = np.asarray(table.m).dtype
+        bp = np.asarray(table.bp).reshape(-1, 1)
+        mq = np.stack(
+            [np.asarray(table.m), np.asarray(table.q)], axis=1
+        ).astype(np_dtype)
+        return jnp.asarray(bp), jnp.asarray(mq)
     m = np.asarray(table.m).astype(np.float32)
     q = np.asarray(table.q).astype(np.float32)
     dmq = np.empty((m.shape[0], 2), np.float32)

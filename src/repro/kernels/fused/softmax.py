@@ -31,8 +31,10 @@ ROADMAP item).
 Width bound: the whole (128-padded) reduction axis stays VMEM-resident and
 the row block bottoms out at one sublane tile, so rows wider than ~52-64k
 columns (masked/maskless) exceed the VMEM budget and will not lower on TPU
-(interpret mode accepts them).  Model dispatch refuses such shapes up front
-with margin (``models/layers.DENSE_FUSED_SOFTMAX_MAX_WIDTH`` = 32k).
+(interpret mode accepts them).  Model dispatch routes such shapes to the
+fused flash-attention kernel instead, with margin
+(``models/layers.DENSE_FUSED_SOFTMAX_MAX_WIDTH`` = 32k) — this dense
+kernel is the small-problem fast path of the fused softmax site.
 """
 from __future__ import annotations
 

@@ -89,12 +89,17 @@ def pwl_nonuniform_2d(
     """pallas_call wrapper over a padded 2-D input (see ops.pwl_activation).
 
     ``bp`` may be the packed (n, 1) layout or a raw 1-D breakpoint array.
+    Narrow (bf16/f16) operands pass through in their storage format — the
+    tile decode upcasts them in-register (native tables); anything else is
+    packed as f32 delta operands.
     """
     n_bp = bp.shape[0]
     r, c = x2d.shape
     bm, bn = min(block[0], r), min(block[1], c)
     grid = (r // bm, c // bn)
     in_specs, out_spec = _block_specs((bm, bn), [(n_bp, 1), (n_bp + 1, 2)])
+    narrow = dmq.dtype in (jnp.bfloat16, jnp.float16)
+    op_dtype = dmq.dtype if narrow else jnp.float32
     return pl.pallas_call(
         functools.partial(_pwl_nonuniform_kernel, n_bp=n_bp),
         grid=grid,
@@ -102,7 +107,7 @@ def pwl_nonuniform_2d(
         out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct((r, c), x2d.dtype),
         interpret=interpret,
-    )(x2d, bp.reshape(n_bp, 1).astype(jnp.float32), dmq.astype(jnp.float32))
+    )(x2d, bp.reshape(n_bp, 1).astype(op_dtype), dmq.astype(op_dtype))
 
 
 def pwl_uniform_2d(

@@ -23,6 +23,7 @@ Usage:
 Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
 """
 import argparse
+import functools
 import json
 import pathlib
 import sys
@@ -33,7 +34,6 @@ import jax
 
 from repro import sfu
 from repro.configs import ARCH_IDS, get_config
-from repro.core import registry
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_step
 from repro.models import SHAPE_CELLS
@@ -73,6 +73,8 @@ def _compile_cell(cfg, mesh, cell, microbatches=None):
 
 def _metrics(compiled) -> dict:
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):  # older jax: list of per-computation dicts
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll = hlo_parse.collective_bytes(hlo)
     return {
@@ -141,10 +143,37 @@ def probe_metrics(arch: str, cfg, mesh, cell, microbatches=None) -> dict:
     return out
 
 
+@functools.lru_cache(maxsize=None)
+def _plan_missing_cached(arch: str, plan) -> tuple[str, ...]:
+    return tuple(sfu.plan_missing_sites(get_config(arch), plan))
+
+
+def plan_missing_sites(arch: str, plan) -> list[str]:
+    """Arch-id wrapper over :func:`sfu.plan_missing_sites` (see there).
+    Cached on (arch, plan) — plans are frozen/hashable — so the sweep's
+    per-arch precheck and run_cell's API-level guard share one evaluation
+    instead of recomputing get_config + model_sites per cell."""
+    return list(_plan_missing_cached(arch, plan))
+
+
 def run_cell(arch: str, shape: str, multi_pod: bool, act_impl: str = "pwl",
-             overrides: dict | None = None) -> dict:
+             plan=None, overrides: dict | None = None) -> dict:
     cell = SHAPE_CELLS[shape]
-    cfg = get_config(arch, act_impl=act_impl, **(overrides or {}))
+    over = dict(overrides or {})
+    if plan is not None:
+        missing = plan_missing_sites(arch, plan)
+        if missing:
+            raise ValueError(
+                f"plan {plan.fingerprint} has no spec for activation sites "
+                f"{missing} that arch '{arch}' instantiates (plan sites: "
+                f"{[k for k in plan]}) — dump a plan from this arch's "
+                "config instead"
+            )
+        over["act_plan"] = plan
+        act_impl = f"plan:{plan.fingerprint}"  # provenance tag for the row
+        cfg = get_config(arch, **over)
+    else:
+        cfg = get_config(arch, act_impl=act_impl, **over)
     if cfg.force_dp_only is None:
         import dataclasses as _dc
 
@@ -248,9 +277,21 @@ def main(argv=None):
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multipod-only", action="store_true")
     ap.add_argument("--singlepod-only", action="store_true")
-    ap.add_argument("--act-impl", default="pwl", choices=list(registry.MODES))
+    ap.add_argument(
+        "--plan", default=None, metavar="PATH",
+        help="compile every cell against this ActivationPlan JSON "
+        "(repro.sfu); default: the jnp PWL plan from each arch config",
+    )
     ap.add_argument("--out", default="experiments/dryrun")
+    # removed flag, kept one release as a hard error with a pointer
+    ap.add_argument("--act-impl", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
+    if args.act_impl is not None:
+        ap.error(
+            "--act-impl was removed: pass --plan <plan.json> instead "
+            "(see docs/plans.md)"
+        )
+    plan = sfu.load_plan(args.plan) if args.plan else None
 
     outdir = pathlib.Path(args.out)
     outdir.mkdir(parents=True, exist_ok=True)
@@ -281,8 +322,21 @@ def main(argv=None):
             path.write_text(json.dumps(row, indent=2))
             print(f"[skip] {tag}", flush=True)
             continue
+        if plan is not None and plan_missing_sites(arch, plan):
+            # one plan JSON cannot cover heterogeneous archs: record an
+            # explicit skip instead of failing the sweep on a KeyError
+            # (plan_missing_sites is cached, so this costs one dict hit)
+            row = {
+                "arch": arch, "shape": shape,
+                "mesh": "2x16x16" if mp else "16x16",
+                "status": f"SKIP (plan {plan.fingerprint} lacks sites "
+                          f"{plan_missing_sites(arch, plan)} for this arch)",
+            }
+            path.write_text(json.dumps(row, indent=2))
+            print(f"[skip] {tag} (plan/arch site mismatch)", flush=True)
+            continue
         try:
-            row = run_cell(arch, shape, mp, act_impl=args.act_impl)
+            row = run_cell(arch, shape, mp, plan=plan)
             path.write_text(json.dumps(row, indent=2, default=str))
             print(
                 f"[ok]   {tag}  compile={row['t_compile_s']}s  "

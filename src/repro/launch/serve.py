@@ -17,7 +17,6 @@ import numpy as np
 
 from repro import sfu
 from repro.configs import get_config, get_reduced_config
-from repro.core import registry
 from repro.models import Model
 
 
@@ -44,21 +43,38 @@ def serve(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--act-impl", default="pwl", choices=list(registry.MODES))
     ap.add_argument(
         "--plan", default=None, metavar="PATH",
-        help="load an ActivationPlan JSON (repro.sfu) — overrides --act-impl",
+        help="load an ActivationPlan JSON (repro.sfu); default: the jnp PWL "
+        "plan compiled from the arch config",
     )
     ap.add_argument(
         "--dump-plan", default=None, metavar="PATH",
         help="write the exact activation plan this run uses as JSON",
     )
+    # removed flag, kept one release as a hard error with a pointer
+    ap.add_argument("--act-impl", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
+    if args.act_impl is not None:
+        ap.error(
+            "--act-impl was removed: pass --plan <plan.json> instead "
+            "(dump one with --dump-plan or sfu.dump_plan(sfu.compile_plan("
+            "cfg), path); see docs/plans.md)"
+        )
 
     getter = get_reduced_config if args.reduced else get_config
-    cfg = getter(args.arch, act_impl=args.act_impl)
     if args.plan:
-        cfg = getter(args.arch, act_plan=sfu.load_plan(args.plan))
+        loaded = sfu.load_plan(args.plan)
+        cfg = getter(args.arch, act_plan=loaded)
+        missing = sfu.plan_missing_sites(cfg, loaded)
+        if missing:
+            ap.error(
+                f"--plan {args.plan} lacks specs for activation sites "
+                f"{missing} that arch '{args.arch}' instantiates — dump one "
+                "from this arch's config with --dump-plan"
+            )
+    else:
+        cfg = getter(args.arch, act_impl="pwl")
     plan = sfu.plan_for(cfg)
     print(f"[serve] activation plan {plan.fingerprint}: "
           f"{ {k: s.impl for k, s in plan.items()} }")

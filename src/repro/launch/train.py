@@ -19,9 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sfu
 from repro.checkpoint.manager import CheckpointManager, install_sigterm_save
 from repro.configs import get_config, get_reduced_config
-from repro.core import registry
 from repro.data.pipeline import DataConfig, IteratorState, PrefetchIterator, SyntheticLMData
 from repro.distributed.monitor import StepMonitor
 from repro.launch.mesh import make_host_mesh
@@ -38,7 +38,7 @@ def train(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=512)
     ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--act-impl", default="exact", choices=list(registry.MODES))
+    ap.add_argument("--act-impl", default="exact", choices=list(sfu.LEGACY_IMPL))
     ap.add_argument("--act-breakpoints", type=int, default=32)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)

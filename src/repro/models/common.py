@@ -48,17 +48,10 @@ class ModelConfig:
     qkv_bias: bool = False
     act_impl: str = "exact"           # exact | pwl | pwl_kernel | pwl_fused
     act_breakpoints: int = 32
-    # DEPRECATED (string knob; use act_site_specs): functions kept exact even
-    # under act_impl="pwl"; entries may be site-qualified ("ssm:silu").
-    pwl_exempt: tuple = ()
-    # DEPRECATED (string knob; use act_site_specs): ((key, n_bp), ...)
-    # site-or-function-keyed table-depth overrides
-    pwl_breakpoint_overrides: tuple = ()
     # explicit per-site plan pins: ((site_key, repro.sfu.ApproxSpec), ...),
-    # applied last (last-match-wins) over the act_impl translation.  This is
-    # the plan-native replacement for pwl_exempt/pwl_breakpoint_overrides —
-    # e.g. mamba2 pins ("ssm:silu", ApproxSpec(fn="silu", impl="exact"))
-    # because SSM-input activations amplify approximation error through the
+    # applied last (last-match-wins) over the act_impl translation — e.g.
+    # mamba2 pins ("ssm:silu", ApproxSpec(fn="silu", impl="exact")) because
+    # SSM-input activations amplify approximation error through the
     # recurrence (EXPERIMENTS.md "SSM sensitivity" study).
     act_site_specs: tuple = ()
     pwl_softmax: bool = False         # PWL-exp softmax (paper Sec. V-B)

@@ -12,10 +12,16 @@ Sliding-window layers dynamic-slice the KV to [q_start-window, q_end), making
 local attention O(S * window) compute instead of O(S^2).
 
 When the plan compiles ``attn.softmax:exp`` with ``impl="fused"`` (paper
-Sec. V-B), attention routes through the fused dense PWL-exp softmax kernel
-instead (``kernels/fused/softmax.py``) — gated by
-``DENSE_FUSED_SOFTMAX_MAX_SCORES`` and single-device dispatch, with a
-warn-once fallback to the flash path (``sfu.warn_fused_fallback``).
+Sec. V-B), attention executes fused on a single device for EVERY shape:
+small problems take the dense PWL-exp softmax kernel
+(``kernels/fused/softmax.py``, gated by ``DENSE_FUSED_SOFTMAX_MAX_SCORES``
+/ ``_MAX_WIDTH`` / the window-coverage crossover as a fast path), and
+everything past those thresholds — long-context prefill/train, narrow
+sliding windows, wide decode caches — runs the fused flash-attention
+kernel with the PWL-exp online softmax
+(``kernels/fused/attention.py``).  The only remaining dynamic fallback to
+the pure-JAX flash path is a multi-device mesh
+(``sfu.mesh_blocks_fused``, warn-once).
 """
 from __future__ import annotations
 
@@ -100,51 +106,63 @@ def sinusoidal_positions(seq_len: int, d_model: int):
 # softmax exp resolution (paper Sec. V-B: PWL exp for softmax)
 
 
+def _softmax_safe_exp(raw: Callable) -> Callable:
+    """Wrap an elementwise exp approximation with the two clamps that keep
+    it softmax-safe: the output clamp keeps it non-negative so the
+    normalizer stays positive, and the input clamp (exp's fit range is
+    [-10, 0.1]; exp(-30) is already ~1e-13) keeps the -1e30 mask fills of
+    the attention paths from overflowing the table's linear left tail —
+    narrow-dtype (f16) tables evaluate in f16, where -1e30 becomes -inf
+    and a flushed-to-zero slope turns it into NaN."""
+    def pwl_exp(x):
+        return jnp.maximum(raw(jnp.maximum(x, -30.0)), 0.0)
+
+    return pwl_exp
+
+
+def pwl_exp_fn(table) -> Callable:
+    """Softmax-safe elementwise PWL exp over a fitted table — the exact
+    closure :func:`resolve_exp` builds for non-exact planned specs.  Public
+    so benchmarks/tests exercise the real flash-path exp, not a copy that
+    can drift from the clamps above."""
+    from repro.core import pwl
+
+    return _softmax_safe_exp(lambda x: pwl.eval_coeff(x, table))
+
+
 def resolve_exp(cfg: ModelConfig, plan=None) -> Callable:
     plan = plan if plan is not None else sfu.plan_for(cfg)
     spec = plan.get(sfu.site_key(sfu.SITE_SOFTMAX, "exp"))
     if spec is not None and not spec.is_exact:
-        # resolve_spec honors the spec's impl (jnp / kernel / fused-fallback).
-        # Two clamps keep the PWL approximation of exp softmax-safe: the
-        # output clamp keeps it non-negative so the normalizer stays
-        # positive, and the input clamp (exp's fit range is [-10, 0.1];
-        # exp(-30) is already ~1e-13) keeps the -1e30 mask fills of the
-        # attention paths from overflowing the table's linear left tail —
-        # narrow-dtype (f16) tables evaluate in f16, where -1e30 becomes
-        # -inf and a flushed-to-zero slope turns it into NaN.
-        raw = sfu.resolve_spec(spec)
-
-        def pwl_exp(x):
-            return jnp.maximum(raw(jnp.maximum(x, -30.0)), 0.0)
-
-        return pwl_exp
+        # resolve_spec honors the spec's impl (jnp / kernel / fused-fallback)
+        return _softmax_safe_exp(sfu.resolve_spec(spec))
     return jnp.exp
 
 
-# fused dense-softmax size caps.  MAX_SCORES bounds the TOTAL score-tensor
-# elements (B*H*S*T) the dense path materializes in f32 (~0.5 GiB at the
-# default) — the flash online softmax it replaces never allocates that
-# tensor, so past the cap flash (with the elementwise PWL exp) wins on
-# memory.  MAX_WIDTH bounds the softmax reduction axis: the kernel keeps the
-# whole (128-padded) row in VMEM and its row block bottoms out at 8
-# sublanes, where the 8 MiB budget admits ~52k masked / ~64k maskless
-# columns — the 32k cap leaves margin for both; wider rows (e.g. 500k-token
-# decode caches) cannot lower on TPU and must take the unfused path.
+# dense-vs-flash crossover for the fused softmax path.  These are NOT
+# fallback gates anymore — past them the fused FLASH-attention kernel
+# (kernels/fused/attention.py) runs instead of the dense kernel, still
+# fused.  MAX_SCORES bounds the TOTAL score-tensor elements (B*H*S*T) the
+# dense path materializes in f32 (~0.5 GiB at the default); the flash
+# kernel never allocates that tensor.  MAX_WIDTH bounds the dense kernel's
+# softmax reduction axis: it keeps the whole (128-padded) row in VMEM and
+# its row block bottoms out at 8 sublanes, where the 8 MiB budget admits
+# ~52k masked / ~64k maskless columns — the 32k cap leaves margin; wider
+# rows (e.g. 500k-token decode caches) cannot lower on TPU and take the
+# flash kernel's blocked KV loop instead.
 DENSE_FUSED_SOFTMAX_MAX_SCORES = 1 << 27
 DENSE_FUSED_SOFTMAX_MAX_WIDTH = 32768
 
 
-def _softmax_fused_table(plan, n_scores: Optional[int] = None,
-                         width: Optional[int] = None,
-                         window: Optional[int] = None,
-                         kv_len: Optional[int] = None):
-    """Table for the fused PWL-exp softmax kernel, or None when attention
-    must use the flash/online path (site absent or not planned fused, a
-    multi-device mesh is active, the score tensor / reduction width exceeds
-    the dense caps, or a sliding window covers too little of the KV for
-    dense scores to be worth it).  The single fused-softmax decision point,
-    mirroring ``plan.fused_table`` for producer epilogues; fallbacks on a
-    fused-planned site warn once."""
+def _softmax_fused_table(plan):
+    """Table for the fused PWL-exp softmax kernels (dense or flash), or None
+    when attention must use the pure-JAX flash/online path: site absent or
+    not planned fused, or a multi-device mesh is active (GSPMD cannot
+    partition a ``pallas_call`` — the one remaining dynamic fallback, warned
+    once via ``sfu.mesh_blocks_fused``).  The single fused-softmax decision
+    point, mirroring ``plan.fused_table`` for producer epilogues; which
+    fused kernel runs is a shape question decided by the caller
+    (``_attn_softmax_dispatch`` / ``decode_attention``)."""
     if plan is None:
         return None
     key = sfu.site_key(sfu.SITE_SOFTMAX, "exp")
@@ -152,27 +170,6 @@ def _softmax_fused_table(plan, n_scores: Optional[int] = None,
     if spec is None or spec.impl != "fused":
         return None
     if sfu.mesh_blocks_fused(key):
-        return None
-    if window is not None and kv_len is not None and kv_len > 2 * window:
-        sfu.warn_fused_fallback(
-            key, f"sliding window ({window}) covers under half of the "
-            f"{kv_len}-token KV: the banded flash path (O(S*window) scores) "
-            "beats dense fused softmax (O(S*T)); using the elementwise PWL "
-            "exp"
-        )
-        return None
-    if n_scores is not None and n_scores > DENSE_FUSED_SOFTMAX_MAX_SCORES:
-        sfu.warn_fused_fallback(
-            key, f"score tensor ({n_scores} total elements) exceeds the "
-            "dense fused-softmax cap; using the elementwise PWL exp inside "
-            "flash attention"
-        )
-        return None
-    if width is not None and width > DENSE_FUSED_SOFTMAX_MAX_WIDTH:
-        sfu.warn_fused_fallback(
-            key, f"softmax reduction width ({width}) exceeds the fused "
-            "kernel's VMEM-resident row cap; using the elementwise PWL exp"
-        )
         return None
     return plan.fused_table(key)
 
@@ -404,16 +401,30 @@ def decode_attention(
     exp_fn: Callable = jnp.exp,
     softmax_table=None,  # PWL exp table -> fused softmax kernel
 ):
-    """Single-position attention over a cache (dense, no chunking needed).
+    """Single-position attention over a cache.
 
     With ``softmax_table`` set (site ``attn.softmax:exp`` planned
     ``impl="fused"``), the row-max/PWL-exp/renormalize reduction runs as one
-    fused Pallas kernel; otherwise it is the elementwise ``exp_fn``
-    formulation below (identical math — see kernels/fused/softmax.py).
+    fused Pallas kernel: the dense softmax kernel while a cache row fits its
+    VMEM-resident width, the fused flash-attention kernel (blocked KV loop,
+    ragged ``kv_valid_len`` masking) for wider caches — e.g. 500k-token
+    decode.  Otherwise the elementwise ``exp_fn`` formulation below
+    (identical math — see kernels/fused/softmax.py).
+
+    ``valid`` must be a prefix-or-full mask per batch row, which the ring
+    and linear cache layouts in :func:`attention_layer` guarantee.
     """
     B, _, H, dh = q.shape
+    T = k_cache.shape[1]
     Hkv = k_cache.shape[2]
     G = H // Hkv
+    if softmax_table is not None and T > DENSE_FUSED_SOFTMAX_MAX_WIDTH:
+        from repro.kernels import fused
+
+        return fused.fused_flash_attention(
+            q, k_cache, v_cache, table=softmax_table, causal=False,
+            kv_valid_len=jnp.sum(valid, axis=-1),
+        )
     scale = 1.0 / math.sqrt(dh)
     qf = q.astype(jnp.float32).reshape(B, Hkv, G, dh)
     s = jnp.einsum(
@@ -503,17 +514,39 @@ def _flash_or_sliced(cfg, q, k, v, *, causal, window, exp_fn):
     )
 
 
+def _dense_softmax_preferred(n_scores: int, width: int,
+                             window: Optional[int], kv_len: int) -> bool:
+    """True when the dense fused-softmax kernel is the better fused executor
+    for these shapes: the score tensor fits the dense cap, a row fits the
+    kernel's VMEM-resident width, and any sliding window covers at least
+    half the KV (narrower windows make the flash kernel's banded KV loop —
+    O(S*window) scores — strictly cheaper than dense O(S*T))."""
+    if window is not None and kv_len > 2 * window:
+        return False
+    return (n_scores <= DENSE_FUSED_SOFTMAX_MAX_SCORES
+            and width <= DENSE_FUSED_SOFTMAX_MAX_WIDTH)
+
+
 def _attn_softmax_dispatch(cfg, q, k, v, *, causal, window, exp_fn, plan):
-    """Attention entry for train/prefill/cross: the fused dense PWL-exp
-    softmax path when the plan asks for it and the shapes/mesh allow, else
-    flash with the (possibly PWL) elementwise ``exp_fn``."""
+    """Attention entry for train/prefill/cross.  When the plan compiles the
+    ``attn.softmax:exp`` site ``impl="fused"`` (and no multi-device mesh
+    blocks Pallas dispatch), attention ALWAYS executes fused: the dense
+    PWL-exp softmax kernel for small problems, the fused flash-attention
+    kernel (PWL-exp online softmax) for everything else — long-context
+    prefill, narrow sliding windows, cross attention.  Otherwise the
+    pure-JAX flash path with the (possibly PWL) elementwise ``exp_fn``."""
     B, S, H = q.shape[0], q.shape[1], q.shape[2]
     T = k.shape[1]
-    table = _softmax_fused_table(plan, n_scores=B * H * S * T, width=T,
-                                 window=window, kv_len=T)
+    table = _softmax_fused_table(plan)
     if table is not None:
-        return dense_pwl_attention(q, k, v, table=table, causal=causal,
-                                   window=window)
+        if _dense_softmax_preferred(B * H * S * T, T, window, T):
+            return dense_pwl_attention(q, k, v, table=table, causal=causal,
+                                       window=window)
+        from repro.kernels import fused
+
+        return fused.fused_flash_attention(
+            q, k, v, table=table, causal=causal, window=window
+        )
     if not causal and window is None:  # cross-attention (encdec)
         return flash_attention(q, k, v, causal=False, exp_fn=exp_fn,
                                unroll=cfg.unroll_scans)
@@ -676,12 +709,11 @@ def attention_layer(
             valid = jnp.broadcast_to(valid, (B, T))
             k_cache = constrain(k_cache, "batch", "cache_seq", "cache_kv", None)
             v_cache = constrain(v_cache, "batch", "cache_seq", "cache_kv", None)
-            # decode materializes the dense score tensor on both paths, so
-            # only the VMEM width cap applies (not the score-tensor cap,
-            # whose point is that flash avoids the allocation entirely)
+            # fused-planned decode picks its kernel by cache width (dense
+            # softmax kernel vs blocked flash) inside decode_attention
             y = decode_attention(
                 q, k_cache, v_cache, valid, exp_fn,
-                softmax_table=_softmax_fused_table(plan, width=T),
+                softmax_table=_softmax_fused_table(plan),
             )
         else:
             # prefill: full causal attention over the (fresh) prefix

@@ -23,27 +23,23 @@ Quick tour::
     act = plan.act("mlp:silu")           # elementwise callable
     table = sfu.get_store().get(plan.spec("mlp:silu"))   # PWLTable
 
-Migration from the deprecated ``repro.core.registry`` string knobs:
+The deprecated ``repro.core.registry`` shim and the ``pwl_exempt`` /
+``pwl_breakpoint_overrides`` string knobs were deleted (ISSUE 5).  The
+remaining construction-time sugar on ``ModelConfig`` — ``act_impl``,
+``act_breakpoints``, ``act_table_dtype`` — translates uniformly across
+sites via :func:`compile_plan`; anything per-site goes through
+``ModelConfig.act_site_specs`` pins or an explicit ``act_plan``:
 
   ======================================  =================================
-  old knob / call                         plan-API equivalent
+  config knob                             plan-API equivalent
   ======================================  =================================
   ``act_impl="pwl"``                      ``ApproxSpec(impl="jnp")``
   ``act_impl="pwl_kernel"``               ``ApproxSpec(impl="kernel")``
   ``act_impl="pwl_fused"``                ``ApproxSpec(impl="fused")``
   ``act_breakpoints=32``                  ``ApproxSpec(n_segments=33)``
-  ``pwl_exempt=("ssm:silu",)``            site spec with ``impl="exact"``
-  ``pwl_breakpoint_overrides``            per-site ``n_segments``
-  (no equivalent)                         ``ApproxSpec(dtype="bf16")`` /
-                                          ``ModelConfig.act_table_dtype``
-  ``registry.resolve_for(cfg, fn, site)`` ``plan_for(cfg).act(key)``
-  ``registry.fused_table_for(cfg, fn)``   ``plan_for(cfg).fused_table(key)``
-  ``registry.get_table(fn, n)``           ``get_store().get(fn=fn, n_breakpoints=n)``
+  ``act_table_dtype="bf16"``              ``ApproxSpec(dtype="bf16")``
+  per-site exemption / depth / dtype      ``act_site_specs`` pin
   ======================================  =================================
-
-Legacy configs keep working: ``compile_plan`` translates the old knobs, and
-``repro.core.registry`` remains as a thin shim that emits
-``DeprecationWarning`` and delegates here.
 """
 from .plan import (
     FUSED_SITES,
@@ -58,6 +54,7 @@ from .plan import (
     mesh_blocks_fused,
     model_sites,
     plan_for,
+    plan_missing_sites,
     reset_fused_fallback_warnings,
     resolve_spec,
     site_key,
@@ -82,6 +79,7 @@ __all__ = [
     "plan_for",
     "resolve_spec",
     "model_sites",
+    "plan_missing_sites",
     "site_key",
     "dump_plan",
     "load_plan",

@@ -21,22 +21,22 @@ Site vocabulary (one entry per *approximation context*, not per layer):
                    PWL-exp softmax kernel)
 
 Every site except ``ssm`` has a fused producer kernel (``kernels/fused/``),
-so ``impl="fused"`` is executable plan intent for all of them; a site that
-cannot actually run fused at dispatch time (no producer kernel, multi-device
-mesh, shapes past the dense-softmax cap) falls back to the unfused jnp PWL
-evaluation and reports it through :func:`warn_fused_fallback` — once per
-site, not per call.
+so ``impl="fused"`` is executable plan intent for all of them; the
+``attn.softmax:`` site additionally picks between two fused executors by
+shape (dense softmax kernel vs flash-attention kernel — see
+``models/layers._attn_softmax_dispatch``).  A site that cannot actually run
+fused at dispatch time — a multi-device mesh, or no producer kernel at all
+(``ssm``) — falls back to the unfused jnp PWL evaluation and reports it
+through :func:`warn_fused_fallback` — once per site, not per call.
 
-Legacy-knob translation (:func:`compile_plan` on a config that only sets
-``act_impl``/``act_breakpoints``/``pwl_exempt``/``pwl_breakpoint_overrides``)
-reproduces the historical resolution: exemption and override keys match a
-bare function name (``"silu"``, every site) or a site-qualified name
-(``"ssm:silu"``); overrides apply last-match-wins; the softmax-exp site
-ignores ``pwl_exempt``/overrides exactly as ``layers.resolve_exp`` did.
-Configs may additionally pin sites explicitly via
-``ModelConfig.act_site_specs`` — ``((site_key, ApproxSpec), ...)`` — the
-plan-native replacement for the legacy string knobs (applied last,
-last-match-wins).
+Config translation (:func:`compile_plan`): ``act_impl`` /
+``act_breakpoints`` / ``act_table_dtype`` are construction-time sugar
+applied uniformly to every site; ``ModelConfig.act_site_specs`` —
+``((site_key, ApproxSpec), ...)`` — pins individual sites explicitly
+(applied last, last-match-wins); an explicit ``cfg.act_plan`` bypasses
+translation entirely.  (The removed ``pwl_exempt`` /
+``pwl_breakpoint_overrides`` string knobs and the ``core/registry`` shim
+are gone — ``act_site_specs`` expresses both.)
 """
 from __future__ import annotations
 
@@ -73,9 +73,9 @@ def site_key(site: str, fn: str) -> str:
 
 # ---------------------------------------------------------------------------
 # fused-fallback reporting: a site planned impl="fused" that cannot run fused
-# (no producer kernel, multi-device mesh, dense-softmax size cap) must say so
-# exactly once — silent fallbacks hide perf regressions, per-call warnings
-# drown the log on scanned layers.
+# (no producer kernel, multi-device mesh) must say so exactly once — silent
+# fallbacks hide perf regressions, per-call warnings drown the log on
+# scanned layers.
 
 _FALLBACK_WARNED: set[str] = set()
 
@@ -255,13 +255,9 @@ def model_sites(cfg) -> list[tuple[str, str]]:
 
 
 def _site_spec(cfg, site: str, fn: str, dtype: str) -> ApproxSpec:
-    """Resolve one (site, fn) through the legacy config knobs.
-
-    Match keys: the bare function name applies at every site (legacy
-    ``_resolve_site`` checked ``name in pwl_exempt`` regardless of site); a
-    site-qualified ``"<site>:<fn>"`` key applies only there.  ``"ssm:silu"``
-    is both the legacy and the new qualified spelling for SSM sites.
-    """
+    """Resolve one (site, fn) from the uniform config knobs (``act_impl`` /
+    ``act_breakpoints``); per-site divergence goes through
+    ``cfg.act_site_specs`` pins in :func:`compile_plan`."""
     act_impl = getattr(cfg, "act_impl", "exact")
     if act_impl not in LEGACY_IMPL:
         raise ValueError(
@@ -269,27 +265,7 @@ def _site_spec(cfg, site: str, fn: str, dtype: str) -> ApproxSpec:
             f"{tuple(LEGACY_IMPL)}"
         )
     n_bp = cfg.act_breakpoints
-    if site == SITE_SOFTMAX:
-        # legacy resolve_exp semantics: active iff pwl_softmax and mode !=
-        # exact; never exempted or overridden.  Under "pwl_fused" the site
-        # now compiles to the fused dense PWL-exp softmax kernel
-        # (kernels/fused/softmax.py); other PWL modes keep the jnp
-        # evaluation inside the flash online softmax.
-        if act_impl == "exact":
-            impl = "exact"
-        elif act_impl == "pwl_fused":
-            impl = "fused"
-        else:
-            impl = "jnp"
-        return ApproxSpec(fn=fn, n_segments=n_bp + 1, dtype=dtype, impl=impl,
-                          fit=DEFAULT_FIT)
-
-    keys = (fn, site_key(site, fn))
-    exempt = any(k in getattr(cfg, "pwl_exempt", ()) for k in keys)
-    for key, bp in getattr(cfg, "pwl_breakpoint_overrides", ()):
-        if key in keys:
-            n_bp = bp
-    if exempt or act_impl == "exact":
+    if act_impl == "exact":
         impl = "exact"
     elif act_impl == "pwl_fused":
         # sites with a fused producer kernel compile to fused intent; the
@@ -305,16 +281,15 @@ def _site_spec(cfg, site: str, fn: str, dtype: str) -> ApproxSpec:
 def compile_plan(cfg) -> ActivationPlan:
     """Compile a ModelConfig's activation knobs into an ActivationPlan.
 
-    Accepts both legacy stringly-typed configs (``act_impl`` + exemption /
-    override tuples) and new-style configs that additionally set
-    ``act_table_dtype``.  Precedence (highest first):
+    Precedence (highest first):
 
       1. ``cfg.act_plan`` — an explicit ActivationPlan is returned as-is;
       2. ``cfg.act_site_specs`` — explicit ``((site_key, ApproxSpec), ...)``
-         per-site pins, applied last-match-wins over the translation below
-         (the plan-native replacement for ``pwl_exempt`` /
-         ``pwl_breakpoint_overrides``);
-      3. legacy-knob translation of ``act_impl`` & friends.
+         per-site pins, applied last-match-wins over the translation below;
+      3. uniform translation of ``act_impl`` / ``act_breakpoints`` /
+         ``act_table_dtype`` (construction-time sugar: the same spec at
+         every site, except ``pwl_fused`` compiles ``impl="jnp"`` for sites
+         without a fused producer kernel).
     """
     explicit = getattr(cfg, "act_plan", None)
     if explicit is not None:
@@ -341,6 +316,24 @@ def compile_plan(cfg) -> ActivationPlan:
             f"config instantiates; sites: {[k for k, _ in sites]}"
         )
     return ActivationPlan(sites=tuple(sites))
+
+
+def plan_missing_sites(cfg, plan: ActivationPlan) -> list[str]:
+    """Site keys `cfg`'s architecture instantiates that `plan` lacks.
+
+    Plans are compiled per config, so one dumped from another arch (a
+    different FFN activation, MoE/SSM sites) cannot resolve this config's
+    layers — ``plan.act``/``plan.spec`` would raise KeyError mid-forward.
+    Anything that threads a user-supplied plan into a model config
+    (``serve --plan``, ``dryrun --plan``, quickstart) checks this first for
+    a clear error.  The softmax site is optional (absent = exact exp), so
+    it never counts as missing."""
+    need = {
+        site_key(site, fn)
+        for site, fn in model_sites(cfg)
+        if site != SITE_SOFTMAX
+    }
+    return sorted(need - {k for k in plan})
 
 
 @functools.lru_cache(maxsize=512)

@@ -9,7 +9,8 @@ import jax.numpy as jnp
 import pytest
 
 import repro  # noqa: F401
-from repro.core import fit, functions as F, registry
+from repro import sfu
+from repro.core import fit, functions as F
 
 
 def sq_aae(table, spec, lo, hi, n=16384):
@@ -36,7 +37,7 @@ def test_fig5_scaling_from_artifacts():
         lo, hi = spec.default_range
         prev = None
         for n in [8, 16, 32, 64]:
-            t = registry.get_table(name, n)
+            t = sfu.get_store().get(fn=name, n_breakpoints=n)
             from repro.core import pwl
 
             cur = pwl.mse(t, spec, lo, hi)

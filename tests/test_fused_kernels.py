@@ -15,7 +15,8 @@ import numpy as np
 import pytest
 
 import repro  # noqa: F401
-from repro.core import functions as F, pwl, registry
+from repro import sfu
+from repro.core import functions as F, pwl
 from repro.kernels import fused
 from repro.models import layers
 
@@ -38,7 +39,7 @@ def _rand(key, shape, dtype=jnp.float32, scale=1.0):
     "m,k,n", [(16, 32, 16), (37, 65, 130), (7, 9, 5), (128, 48, 96)]
 )
 def test_fused_linear_matches_ref_shapes(m, k, n):
-    table = registry.get_table("gelu", 32)
+    table = sfu.get_store().get(fn="gelu", n_breakpoints=32)
     x = _rand(0, (m, k), scale=2.0)
     w = _rand(1, (k, n), scale=0.2)
     b = _rand(2, (n,), scale=0.1)
@@ -48,7 +49,7 @@ def test_fused_linear_matches_ref_shapes(m, k, n):
 
 
 def test_fused_linear_no_bias_and_leading_dims():
-    table = registry.get_table("silu", 32)
+    table = sfu.get_store().get(fn="silu", n_breakpoints=32)
     x = _rand(0, (2, 5, 33), scale=2.0)
     w = _rand(1, (33, 40), scale=0.2)
     y = fused.fused_linear(x, w, table=table, block=BLK)
@@ -59,7 +60,7 @@ def test_fused_linear_no_bias_and_leading_dims():
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_fused_linear_dtypes(dtype):
-    table = registry.get_table("gelu", 32)
+    table = sfu.get_store().get(fn="gelu", n_breakpoints=32)
     x = _rand(0, (24, 48), dtype, scale=2.0)
     w = _rand(1, (48, 64), dtype, scale=0.2)
     y = fused.fused_linear(x, w, table=table, block=BLK)
@@ -91,7 +92,7 @@ def test_fused_linear_identity_and_exact_epilogues():
 
 @pytest.mark.parametrize("act", GLU_ACTS)
 def test_fused_glu_matches_ref_all_glu_activations(act):
-    table = registry.get_table(act, 32)
+    table = sfu.get_store().get(fn=act, n_breakpoints=32)
     x = _rand(0, (37, 65), scale=2.0)
     wg = _rand(1, (65, 130), scale=0.2)
     wu = _rand(2, (65, 130), scale=0.2)
@@ -102,7 +103,7 @@ def test_fused_glu_matches_ref_all_glu_activations(act):
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_fused_glu_dtypes(dtype):
-    table = registry.get_table("silu", 32)
+    table = sfu.get_store().get(fn="silu", n_breakpoints=32)
     x = _rand(0, (2, 9, 48), dtype, scale=2.0)
     wg = _rand(1, (48, 56), dtype, scale=0.2)
     wu = _rand(2, (48, 56), dtype, scale=0.2)
@@ -120,7 +121,7 @@ def test_fused_glu_single_pass_jaxpr():
     The unfused pwl path shows up in a jaxpr as gather/take ops (coefficient
     fetch) outside any pallas_call; the fused path must contain exactly one
     pallas_call and no top-level gather."""
-    table = registry.get_table("gelu", 32)
+    table = sfu.get_store().get(fn="gelu", n_breakpoints=32)
     x = _rand(0, (64, 64), scale=2.0)
     wg = _rand(1, (64, 64), scale=0.2)
     wu = _rand(2, (64, 64), scale=0.2)
@@ -148,7 +149,7 @@ def test_fused_rmsnorm_matches_layer():
 
 
 def test_fused_rmsnorm_with_pwl_epilogue():
-    table = registry.get_table("gelu", 32)
+    table = sfu.get_store().get(fn="gelu", n_breakpoints=32)
     x = _rand(0, (33, 40), scale=3.0)
     scale = _rand(1, (40,), scale=0.3)
     y = fused.fused_rmsnorm(x, scale, table=table, block_rows=16)
@@ -162,7 +163,7 @@ def test_fused_rmsnorm_with_pwl_epilogue():
 
 @pytest.mark.parametrize("op", ["linear", "glu", "norm"])
 def test_fused_ops_grads_match_unfused(op):
-    table = registry.get_table("gelu", 32)
+    table = sfu.get_store().get(fn="gelu", n_breakpoints=32)
     x = _rand(0, (9, 33), scale=1.5)
     if op == "linear":
         w = _rand(1, (33, 21), scale=0.2)
@@ -230,14 +231,14 @@ def test_epilogue_plan_is_hashable_and_validates():
     with pytest.raises(KeyError):
         fused.exact_plan("not_a_function")
     with pytest.raises(ValueError):
-        fused.plan_and_operands(registry.get_table("gelu", 32), "tanh")
+        fused.plan_and_operands(sfu.get_store().get(fn="gelu", n_breakpoints=32), "tanh")
 
 
 def test_pwl_eval_tile_is_shared_with_standalone_kernel():
     """The standalone kernel and the fused epilogue share one decode body."""
     from repro.kernels import ops
 
-    table = registry.get_table("gelu", 32)
+    table = sfu.get_store().get(fn="gelu", n_breakpoints=32)
     x = _rand(0, (16, 128), scale=3.0)
     y_standalone = ops.pwl_activation(x, table)
     bp, dmq = fused.pack_table(table)
@@ -255,19 +256,23 @@ def _tiny_cfg(**over):
     return dataclasses.replace(reduced(), dtype=jnp.float32, **over)
 
 
-def test_registry_mode_and_fallback():
-    assert "pwl_fused" in registry.MODES
-    # elementwise fallback under pwl_fused == unfused pwl
-    act = registry.resolve("pwl_fused", "silu", 32)
+def test_plan_fused_table_and_elementwise_fallback():
+    assert "pwl_fused" in sfu.LEGACY_IMPL
+    # elementwise fallback of impl="fused" == unfused pwl
+    act = sfu.resolve_spec(
+        sfu.ApproxSpec(fn="silu", n_segments=33, impl="fused"))
     x = _rand(0, (64,), scale=3.0)
     np.testing.assert_allclose(
-        act(x), pwl.eval_coeff(x, registry.get_table("silu", 32)), atol=1e-6
+        act(x), pwl.eval_coeff(x, sfu.get_store().get(fn="silu", n_breakpoints=32)), atol=1e-6
     )
     cfg = _tiny_cfg(act_impl="pwl_fused")
-    assert registry.fused_table_for(cfg, "gelu_tanh") is not None
-    assert registry.fused_table_for(_tiny_cfg(act_impl="pwl"), "gelu_tanh") is None
-    exempt = _tiny_cfg(act_impl="pwl_fused", pwl_exempt=("gelu_tanh",))
-    assert registry.fused_table_for(exempt, "gelu_tanh") is None
+    assert sfu.plan_for(cfg).fused_table("mlp:gelu_tanh") is not None
+    assert sfu.plan_for(
+        _tiny_cfg(act_impl="pwl")).fused_table("mlp:gelu_tanh") is None
+    exempt = _tiny_cfg(act_impl="pwl_fused", act_site_specs=(
+        ("mlp:gelu_tanh", sfu.ApproxSpec(fn="gelu_tanh", impl="exact")),
+    ))
+    assert sfu.plan_for(exempt).fused_table("mlp:gelu_tanh") is None
 
 
 @pytest.mark.parametrize("mlp_type", ["geglu", "mlp"])
@@ -353,7 +358,7 @@ def test_fused_dispatch_falls_back_on_multidevice_mesh():
 def test_pwl_backward_has_no_onehot_blowup():
     """The VJP recompute must stay O(M*N): no (M, N, n_bp) one-hot tensor in
     the gradient jaxpr (the delta-accumulation loop keeps temporaries 2-D)."""
-    table = registry.get_table("gelu", 32)
+    table = sfu.get_store().get(fn="gelu", n_breakpoints=32)
     x = _rand(0, (16, 32), scale=1.5)
     wg = _rand(1, (32, 24), scale=0.2)
     wu = _rand(2, (32, 24), scale=0.2)
@@ -366,7 +371,9 @@ def test_pwl_backward_has_no_onehot_blowup():
 
 
 def test_mlp_layer_exempt_falls_back_to_unfused():
-    cfg = _tiny_cfg(act_impl="pwl_fused", pwl_exempt=("gelu_tanh",))
+    cfg = _tiny_cfg(act_impl="pwl_fused", act_site_specs=(
+        ("mlp:gelu_tanh", sfu.ApproxSpec(fn="gelu_tanh", impl="exact")),
+    ))
     d, f = cfg.d_model, cfg.d_ff
     params = {
         "w_gate": _rand(0, (d, f), scale=0.1),

@@ -431,7 +431,10 @@ def test_fused_on_site_without_kernel_warns_once():
                                   np.asarray(pwl.eval_coeff(x, table)))
 
 
-def test_dense_softmax_cap_falls_back_to_flash_and_warns_once(monkeypatch):
+def test_dense_softmax_cap_routes_to_fused_flash(monkeypatch):
+    """Past the dense score cap, fused-planned attention must stay FUSED —
+    the flash-attention kernel with the PWL-exp online softmax takes over
+    (ISSUE 5); there is no fallback warning anymore."""
     monkeypatch.setattr(layers, "DENSE_FUSED_SOFTMAX_MAX_SCORES", 4)
     cfg = _attn_cfg(act_impl="pwl_fused", pwl_softmax=True)
     cfg_ref = _attn_cfg(act_impl="pwl", pwl_softmax=True)
@@ -440,17 +443,16 @@ def test_dense_softmax_cap_falls_back_to_flash_and_warns_once(monkeypatch):
     with warnings.catch_warnings(record=True) as rec:
         warnings.simplefilter("always")
         y, _ = layers.attention_layer(cfg, params, x)
-        layers.attention_layer(cfg, params, x)  # second call: no new warning
-    msgs = [w for w in rec if "falling back" in str(w.message)]
-    assert len(msgs) == 1 and "cap" in str(msgs[0].message)
-    # the fallback IS the unfused PWL flash path
+    assert not [w for w in rec if "falling back" in str(w.message)]
+    # the fused flash kernel reproduces the unfused PWL flash formulation
     y_ref, _ = layers.attention_layer(cfg_ref, params, x)
-    np.testing.assert_allclose(y, y_ref, atol=1e-6, rtol=1e-6)
+    np.testing.assert_allclose(y, y_ref, atol=1e-5, rtol=1e-5)
 
 
-def test_narrow_sliding_window_falls_back_to_banded_flash():
+def test_narrow_sliding_window_routes_to_fused_flash():
     """A local-attention layer whose window covers under half the KV must
-    keep the O(S*window) banded flash path instead of dense fused scores."""
+    run the fused flash kernel's banded KV loop (skipped out-of-window
+    blocks), not dense fused scores — and not fall back (ISSUE 5)."""
     cfg = _attn_cfg(act_impl="pwl_fused", pwl_softmax=True, sliding_window=4)
     cfg_ref = _attn_cfg(act_impl="pwl", pwl_softmax=True, sliding_window=4)
     params = _attn_params(cfg)
@@ -458,11 +460,9 @@ def test_narrow_sliding_window_falls_back_to_banded_flash():
     with warnings.catch_warnings(record=True) as rec:
         warnings.simplefilter("always")
         y, _ = layers.attention_layer(cfg, params, x, kind="attn_local")
-        layers.attention_layer(cfg, params, x, kind="attn_local")
-    msgs = [w for w in rec if "falling back" in str(w.message)]
-    assert len(msgs) == 1 and "window" in str(msgs[0].message)
+    assert not [w for w in rec if "falling back" in str(w.message)]
     y_ref, _ = layers.attention_layer(cfg_ref, params, x, kind="attn_local")
-    np.testing.assert_allclose(y, y_ref, atol=1e-6, rtol=1e-6)
+    np.testing.assert_allclose(y, y_ref, atol=1e-5, rtol=1e-5)
 
 
 def test_wide_sliding_window_stays_fused():
@@ -480,9 +480,10 @@ def test_wide_sliding_window_stays_fused():
     np.testing.assert_allclose(y, y_ref, atol=2e-5, rtol=1e-4)
 
 
-def test_dense_softmax_width_cap_gates_decode(monkeypatch):
-    """Reduction rows wider than the kernel's VMEM-resident cap must refuse
-    fused dispatch (they cannot lower on TPU) and warn once."""
+def test_wide_decode_cache_routes_to_fused_flash(monkeypatch):
+    """Cache rows wider than the dense kernel's VMEM-resident cap must run
+    the fused flash kernel's blocked KV loop (ragged kv_valid_len masking)
+    — still fused, no fallback warning (ISSUE 5)."""
     monkeypatch.setattr(layers, "DENSE_FUSED_SOFTMAX_MAX_WIDTH", 8)
     cfg = _attn_cfg(act_impl="pwl_fused", pwl_softmax=True)
     cfg_ref = _attn_cfg(act_impl="pwl", pwl_softmax=True)
@@ -497,31 +498,30 @@ def test_dense_softmax_width_cap_gates_decode(monkeypatch):
     with warnings.catch_warnings(record=True) as rec:
         warnings.simplefilter("always")
         y, _ = layers.attention_layer(cfg, params, x, cache=cache, cache_pos=5)
-        layers.attention_layer(cfg, params, x, cache=cache, cache_pos=5)
-    msgs = [w for w in rec if "falling back" in str(w.message)]
-    assert len(msgs) == 1 and "width" in str(msgs[0].message)
+    assert not [w for w in rec if "falling back" in str(w.message)]
     y_ref, _ = layers.attention_layer(cfg_ref, params, x, cache=cache, cache_pos=5)
-    np.testing.assert_allclose(y, y_ref, atol=1e-6, rtol=1e-6)
+    np.testing.assert_allclose(y, y_ref, atol=1e-5, rtol=1e-5)
 
 
 # ---------------------------------------------------------------------------
 # act_site_specs config migration
 
 
-def test_act_site_specs_equivalent_to_pwl_exempt():
-    base = dict(
+def test_act_site_specs_pin_exempts_single_site():
+    """An act_site_specs exact pin exempts exactly its site — the plan-native
+    replacement for the deleted pwl_exempt string knob."""
+    pinned = ModelConfig(
         name="t", family="ssm", n_layers=2, d_model=16, n_heads=2,
         n_kv_heads=2, d_ff=32, vocab_size=64, act_impl="pwl",
         act_breakpoints=32, ssm_state=8,
+        act_site_specs=(
+            ("ssm:silu", sfu.ApproxSpec(fn="silu", impl="exact")),
+        ),
     )
-    legacy = ModelConfig(**base, pwl_exempt=("ssm:silu",))
-    pinned = ModelConfig(**base, act_site_specs=(
-        ("ssm:silu", sfu.ApproxSpec(fn="silu", impl="exact")),
-    ))
-    pl_legacy = sfu.compile_plan(legacy)
-    pl_pinned = sfu.compile_plan(pinned)
-    assert {k: s.impl for k, s in pl_legacy.items()} == \
-           {k: s.impl for k, s in pl_pinned.items()}
+    plan = sfu.compile_plan(pinned)
+    assert plan.spec("ssm:silu").impl == "exact"
+    assert plan.spec("mlp:silu").impl == "jnp"
+    assert plan.spec("ssm:softplus").impl == "jnp"
 
 
 def test_act_site_specs_can_pin_segments_and_dtype():

@@ -16,11 +16,12 @@ except ImportError:
     HAVE_HYPOTHESIS = False
 
 import repro  # noqa: F401
-from repro.core import functions as F, pwl, registry
+from repro import sfu
+from repro.core import functions as F, pwl
 from repro.kernels import ops, ref
 
-TABLE = registry.get_table("gelu", 32)
-TABLE16 = registry.get_table("silu", 16)
+TABLE = sfu.get_store().get(fn="gelu", n_breakpoints=32)
+TABLE16 = sfu.get_store().get(fn="silu", n_breakpoints=16)
 
 
 SHAPES = [
@@ -112,7 +113,7 @@ else:
 
 
 def test_pwl_softmax_ref_close_to_exact():
-    table = registry.get_table("exp", 32)
+    table = sfu.get_store().get(fn="exp", n_breakpoints=32)
     x = jax.random.normal(jax.random.PRNGKey(3), (4, 128)) * 3
     approx = ref.pwl_softmax_ref(x, table)
     exact = jax.nn.softmax(x, axis=-1)

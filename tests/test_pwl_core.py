@@ -12,7 +12,8 @@ except ImportError:
     HAVE_HYPOTHESIS = False
 
 import repro  # noqa: F401  (compat shim)
-from repro.core import fit, functions as F, pwl, quantize, registry
+from repro import sfu
+from repro.core import fit, functions as F, pwl, quantize
 
 
 class TestPWLTable:
@@ -31,7 +32,7 @@ class TestPWLTable:
 
     def test_eval_continuity_at_breakpoints(self):
         """f̂ must be continuous (steady) at every breakpoint — paper Sec. IV."""
-        table = registry.get_table("gelu", 32)
+        table = sfu.get_store().get(fn="gelu", n_breakpoints=32)
         eps = 1e-4
         left = pwl.eval_coeff(table.bp - eps, table)
         right = pwl.eval_coeff(table.bp + eps, table)
@@ -41,7 +42,7 @@ class TestPWLTable:
         """Far outside the range the PWL must ride the asymptote (Sec. IV)."""
         for name in ["gelu", "silu", "tanh", "sigmoid"]:
             spec = F.get(name)
-            table = registry.get_table(name, 32)
+            table = sfu.get_store().get(fn=name, n_breakpoints=32)
             x = jnp.asarray([-100.0, 100.0])
             y = pwl.eval_coeff(x, table)
             expected = jnp.asarray(
@@ -114,7 +115,7 @@ class TestRegistryTables:
         """Fitted artifacts must beat the uniform baseline on their range."""
         spec = F.get(name)
         lo, hi = spec.default_range
-        table = registry.get_table(name, n_bp)
+        table = sfu.get_store().get(fn=name, n_breakpoints=n_bp)
         uni = pwl.make_uniform_table(spec, n_bp)
         assert pwl.mse(table, spec, lo, hi) < pwl.mse(uni, spec, lo, hi)
 
@@ -124,14 +125,16 @@ class TestRegistryTables:
         for name in ["gelu", "silu", "sigmoid", "tanh", "exp"]:
             spec = F.get(name)
             lo, hi = spec.default_range
-            table = registry.get_table(name, 32)
+            table = sfu.get_store().get(fn=name, n_breakpoints=32)
             assert pwl.mse(table, spec, lo, hi) < ulp_fp16
 
-    def test_resolve_modes(self):
+    def test_resolve_impls(self):
         x = jnp.linspace(-4, 4, 512)
-        exact = registry.resolve("exact", "gelu")(x)
-        approx = registry.resolve("pwl", "gelu", 32)(x)
-        kernel = registry.resolve("pwl_kernel", "gelu", 32)(x)
+        exact = sfu.resolve_spec(sfu.ApproxSpec(fn="gelu", impl="exact"))(x)
+        approx = sfu.resolve_spec(
+            sfu.ApproxSpec(fn="gelu", n_segments=33, impl="jnp"))(x)
+        kernel = sfu.resolve_spec(
+            sfu.ApproxSpec(fn="gelu", n_segments=33, impl="kernel"))(x)
         assert float(jnp.max(jnp.abs(exact - approx))) < 5e-3
         np.testing.assert_allclose(approx, kernel, rtol=1e-5, atol=1e-6)
 
@@ -139,7 +142,7 @@ class TestRegistryTables:
 class TestQuantize:
     @pytest.mark.parametrize("bits,tol", [(8, 0.15), (16, 1e-3), (32, 1e-5)])
     def test_fixed_point_error_bounded(self, bits, tol):
-        table = registry.get_table("gelu", 32)
+        table = sfu.get_store().get(fn="gelu", n_breakpoints=32)
         qt = quantize.quantize_table(table, bits, (-8.0, 8.0))
         x = jnp.linspace(-8, 8, 4097)
         y_fp = pwl.eval_coeff(x, table)
@@ -149,7 +152,7 @@ class TestQuantize:
     def test_decode_consistency(self):
         """Integer compare decode must pick the same segment as float decode
         (up to input-quantization ties)."""
-        table = registry.get_table("tanh", 16)
+        table = sfu.get_store().get(fn="tanh", n_breakpoints=16)
         qt = quantize.quantize_table(table, 16, (-8.0, 8.0))
         x = jnp.linspace(-7.9, 7.9, 1001)
         idx_f = jnp.sum(x[:, None] > table.bp, axis=-1)

@@ -1,12 +1,11 @@
-"""repro.sfu approximation-plan API: specs, plans, store, legacy agreement.
+"""repro.sfu approximation-plan API: specs, plans, store, site resolution.
 
-Covers the ISSUE 3 acceptance criteria:
-  * site-resolution semantics: bare vs site-qualified exemptions
-    ("silu" vs "ssm:silu"), breakpoint overrides (last match wins);
+Covers the ISSUE 3 acceptance criteria (minus the legacy registry shim,
+deleted in ISSUE 5 — ``act_site_specs`` pins are the only per-site
+override surface now):
+  * site-resolution semantics: uniform ``act_impl`` translation plus
+    explicit per-site ``act_site_specs`` pins (last match wins);
   * plan JSON round-trip (lossless, stable fingerprint);
-  * byte-identical agreement between ``compile_plan`` resolution and the
-    legacy registry-shim translation for every shipped model config under
-    every legacy ``act_impl`` mode;
   * TableStore: the old lru_cache stale-fallback bug (fallback must upgrade
     once an artifact appears) and warn-once-overall behaviour; provenance
     records embedded in artifacts;
@@ -25,7 +24,7 @@ import pytest
 import repro  # noqa: F401
 from repro import sfu
 from repro.configs import ARCH_IDS, get_config, get_reduced_config
-from repro.core import functions as F, pwl, registry
+from repro.core import functions as F, pwl
 from repro.models.common import ModelConfig
 
 X_GRID = jnp.linspace(-12.0, 12.0, 257, dtype=jnp.float32)
@@ -87,27 +86,24 @@ class TestApproxSpec:
 
 
 class TestSiteResolution:
-    def test_bare_exemption_hits_every_site(self):
-        cfg = _ssm_cfg(pwl_exempt=("silu",))
-        plan = sfu.compile_plan(cfg)
-        assert plan.spec("mlp:silu").impl == "exact"
-        assert plan.spec("ssm:silu").impl == "exact"
-        assert plan.spec("ssm:softplus").impl == "jnp"  # not exempt
-
-    def test_site_qualified_exemption_hits_only_its_site(self):
-        cfg = _ssm_cfg(pwl_exempt=("ssm:silu",))
+    def test_site_pin_exempts_only_its_site(self):
+        cfg = _ssm_cfg(act_site_specs=(
+            ("ssm:silu", sfu.ApproxSpec(fn="silu", impl="exact")),
+        ))
         plan = sfu.compile_plan(cfg)
         assert plan.spec("ssm:silu").impl == "exact"
         assert plan.spec("mlp:silu").impl == "jnp"
+        assert plan.spec("ssm:softplus").impl == "jnp"  # not pinned
 
-    def test_breakpoint_overrides_last_match_wins(self):
-        cfg = _ssm_cfg(
-            pwl_breakpoint_overrides=(("silu", 8), ("ssm:silu", 64)),
-        )
+    def test_site_pins_last_match_wins(self):
+        cfg = _ssm_cfg(act_site_specs=(
+            ("ssm:silu", sfu.ApproxSpec(fn="silu", n_segments=9)),
+            ("ssm:silu", sfu.ApproxSpec(fn="silu", n_segments=65)),
+        ))
         plan = sfu.compile_plan(cfg)
-        assert plan.spec("ssm:silu").n_segments == 65   # qualified applied last
-        assert plan.spec("mlp:silu").n_segments == 9    # bare applies everywhere
-        assert plan.spec("ssm:softplus").n_segments == 17  # untouched default
+        assert plan.spec("ssm:silu").n_segments == 65   # last pin applied
+        assert plan.spec("mlp:silu").n_segments == 17   # untouched default
+        assert plan.spec("ssm:softplus").n_segments == 17
 
     def test_fused_only_on_mlp_site(self):
         cfg = _ssm_cfg(act_impl="pwl_fused")
@@ -176,69 +172,32 @@ class TestPlanSerialization:
 
 
 # ---------------------------------------------------------------------------
-# agreement with the legacy shim on every shipped config
-
-
-LEGACY_SITE = {"mlp": "", "moe.expert": "", "ssm": "ssm"}
+# uniform act_impl translation on every shipped config
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS + ["repro-100m"])
-def test_compile_plan_matches_legacy_shim(arch):
-    """Per-site resolution must be byte-identical between the plan path and
-    the legacy registry-shim translation, for every act_impl mode."""
-    for mode in registry.MODES:
+def test_compile_plan_all_modes_all_archs(arch):
+    """Every shipped config compiles a non-empty plan under every act_impl
+    mode, each spec resolves to a working elementwise callable, and the
+    fused-table decision point agrees with the compiled impl."""
+    for mode in sfu.LEGACY_IMPL:
         cfg = get_config(arch, act_impl=mode)
         plan = sfu.compile_plan(cfg)
         assert len(plan) > 0, arch
         for key, spec in plan.items():
-            site, fn = key.split(":", 1)
-            if site == "attn.softmax":
-                continue  # legacy resolve_exp is covered in TestResolveExp
-            with warnings.catch_warnings():
-                warnings.simplefilter("ignore", DeprecationWarning)
-                legacy_act = registry.resolve_for(cfg, fn, site=LEGACY_SITE[site])
-                legacy_fused = registry.fused_table_for(
-                    cfg, fn, site=LEGACY_SITE[site]
-                )
-            y_plan = np.asarray(plan.act(key)(X_GRID))
-            y_legacy = np.asarray(legacy_act(X_GRID))
-            np.testing.assert_array_equal(y_plan, y_legacy, err_msg=f"{arch} {key}")
-            if site != "mlp":
-                # the legacy fused decision point was only ever consulted
-                # from the dense-MLP site; the plan is strictly more precise
-                # (it statically records the unfused fallback elsewhere)
-                continue
-            plan_fused = plan.fused_table(key)
-            assert (plan_fused is None) == (legacy_fused is None), f"{arch} {key}"
-            if plan_fused is not None:
-                np.testing.assert_array_equal(
-                    np.asarray(plan_fused.bp), np.asarray(legacy_fused.bp)
-                )
-                np.testing.assert_array_equal(
-                    np.asarray(plan_fused.m), np.asarray(legacy_fused.m)
-                )
-                np.testing.assert_array_equal(
-                    np.asarray(plan_fused.q), np.asarray(legacy_fused.q)
-                )
+            y = np.asarray(plan.act(key)(X_GRID))
+            assert y.shape == X_GRID.shape and np.all(np.isfinite(y)), (
+                arch, mode, key
+            )
+            fused_table = plan.fused_table(key)
+            assert (fused_table is not None) == (spec.impl == "fused"), (
+                arch, mode, key
+            )
 
 
-def test_legacy_shim_emits_deprecation_warnings():
-    cfg = _tiny_cfg()
-    with pytest.warns(DeprecationWarning):
-        registry.get_table("gelu", 32)
-    with pytest.warns(DeprecationWarning):
-        registry.resolve("pwl", "gelu", 32)
-    with pytest.warns(DeprecationWarning):
-        registry.resolve_for(cfg, "silu")
-    with pytest.warns(DeprecationWarning):
-        registry.fused_table_for(cfg, "silu")
-
-
-def test_legacy_unknown_mode_still_raises():
+def test_unknown_act_impl_mode_raises():
     with pytest.raises(ValueError, match="unknown activation mode"):
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            registry.resolve("pwl_quantum", "gelu")
+        sfu.compile_plan(_tiny_cfg(act_impl="pwl_quantum"))
 
 
 class TestResolveExp:
