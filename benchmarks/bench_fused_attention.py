@@ -33,9 +33,7 @@ coverage summary describes the paper-scale dispatch policy).
 from __future__ import annotations
 
 import argparse
-import json
 import pathlib
-import time
 
 import jax
 import jax.numpy as jnp
@@ -50,9 +48,9 @@ DEFAULT_OUT = (
 )
 
 try:  # package-style (python -m benchmarks.run) or script-style invocation
-    from .common import emit, time_fn
+    from .common import emit, provenance, time_fn, write_bench_json
 except ImportError:
-    from common import emit, time_fn
+    from common import emit, provenance, time_fn, write_bench_json
 
 # nominal prefill cells (ISSUE 5): causal and window=256 at S in {1k, 4k, 16k}
 NOMINAL_S = (1024, 4096, 16384)
@@ -160,13 +158,10 @@ def main(argv=None):
     ]
     payload = {
         "benchmark": "fused_attention",
-        "backend": jax.default_backend(),
-        "interpret_mode": jax.default_backend() != "tpu",
-        "unix_time": int(time.time()),
+        **provenance(args.quick),
         "shape": {"batch": B, "heads": H, "kv_heads": HKV, "head_dim": DH,
                   "dtype": str(jnp.dtype(dtype))},
         "breakpoints": args.breakpoints,
-        "quick": bool(args.quick),
         "cells": results,
         "summary": {
             "coverage": coverage,
@@ -177,9 +172,7 @@ def main(argv=None):
             ),
         },
     }
-    out = pathlib.Path(args.out)
-    out.write_text(json.dumps(payload, indent=2) + "\n")
-    print(f"# results -> {out}")
+    write_bench_json(args.out, payload)
 
 
 if __name__ == "__main__":

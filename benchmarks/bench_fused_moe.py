@@ -20,9 +20,7 @@ only meaningful on TPU; --quick exists for CI smoke coverage.
 from __future__ import annotations
 
 import argparse
-import json
 import pathlib
-import time
 
 import jax
 import jax.numpy as jnp
@@ -35,9 +33,9 @@ from repro.kernels import fused
 DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_fused_moe.json"
 
 try:  # package-style (python -m benchmarks.run) or script-style invocation
-    from .common import emit, time_fn
+    from .common import emit, provenance, time_fn, write_bench_json
 except ImportError:
-    from common import emit, time_fn
+    from common import emit, provenance, time_fn, write_bench_json
 
 
 def make_expert_ffn(mode: str, table):
@@ -119,19 +117,14 @@ def main(argv=None):
 
     payload = {
         "benchmark": "fused_moe",
-        "backend": jax.default_backend(),
-        "interpret_mode": jax.default_backend() != "tpu",
-        "unix_time": int(time.time()),
+        **provenance(args.quick),
         "shape": {"experts": E, "capacity": C, "d_model": D, "d_ff": F,
                   "dtype": str(jnp.dtype(dtype))},
         "activation": args.activation,
         "breakpoints": args.breakpoints,
-        "quick": bool(args.quick),
         "modes": results,
     }
-    out = pathlib.Path(args.out)
-    out.write_text(json.dumps(payload, indent=2) + "\n")
-    print(f"# results -> {out}")
+    write_bench_json(args.out, payload)
 
 
 if __name__ == "__main__":

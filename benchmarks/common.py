@@ -1,10 +1,45 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing, CSV emission, JSON provenance."""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
 import jax.numpy as jnp
+
+
+def provenance(quick: bool = False) -> dict:
+    """The provenance block every ``BENCH_*.json`` embeds at top level.
+
+    ``backend``/``interpret_mode`` are the load-bearing fields: on any
+    non-TPU backend the Pallas kernels run in interpret mode, so latency
+    numbers are validation-only and must never be read as TPU latencies
+    (ROADMAP flags this).  ``device``/``jax_version`` pin the machine, and
+    ``quick`` marks CI-smoke shapes.
+    """
+    backend = jax.default_backend()
+    return {
+        "backend": backend,
+        "interpret_mode": backend != "tpu",
+        "device": jax.devices()[0].device_kind,
+        "jax_version": jax.__version__,
+        "unix_time": int(time.time()),
+        "quick": bool(quick),
+    }
+
+
+def write_bench_json(path, payload: dict) -> pathlib.Path:
+    """Write one benchmark's machine-readable results, refusing payloads
+    that lost their provenance block."""
+    missing = [k for k in ("benchmark", "backend", "interpret_mode")
+               if k not in payload]
+    if missing:
+        raise ValueError(f"bench payload missing provenance keys: {missing}")
+    out = pathlib.Path(path)
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# results -> {out}")
+    return out
 
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:

@@ -25,6 +25,7 @@ BENCHMARKS = [
     ("fused_moe", "benchmarks.bench_fused_moe"),
     ("fused_attention", "benchmarks.bench_fused_attention"),
     ("roofline", "benchmarks.bench_roofline"),
+    ("serving", "benchmarks.bench_serving"),
 ]
 
 

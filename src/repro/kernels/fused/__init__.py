@@ -16,6 +16,10 @@ kernel that produced the pre-activation.  This package provides:
   attention — blocked flash attention whose ONLINE softmax exp (shifted
               scores and correction factor) runs through the PWL decode —
               the long-sequence / sliding-window attention hot path
+  decoding  — split-KV flash decoding over a paged KV cache: single-token
+              queries, KV splits across the grid, PWL-exp online softmax
+              per split, softmax_split-style cross-split merge (serving
+              decode hot path)
   norm      — fused RMSNorm (+ optional activation epilogue)
 
 Models opt in through their activation plan: sites compiled with
@@ -38,6 +42,7 @@ from .epilogue import (  # noqa: F401
     table_dtype_name,
 )
 from .attention import fused_flash_attention  # noqa: F401
+from .decoding import merge_split_partials, paged_flash_decode  # noqa: F401
 from .glu import fused_glu  # noqa: F401
 from .linear import fused_linear  # noqa: F401
 from .moe import fused_moe_glu  # noqa: F401

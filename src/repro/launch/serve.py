@@ -1,15 +1,23 @@
-"""Batched serving loop: prefill + decode with a continuous token budget.
+"""Serving launcher: continuous batching over the paged KV cache.
 
-Drives the same Model/steps machinery as the dry-run's serve cells, at host
-scale.  Demonstrates the serving side of the framework: batched prefill,
-greedy decode over a KV cache, PWL activations on (the paper's deployment
-scenario: inference accelerators).
+Drives :class:`repro.serving.PagedServingEngine` end to end — prompts are
+admitted into fixed batch slots between decode steps, prefill runs through
+the fused flash kernel, decode runs through the split-KV paged flash-
+decoding kernel, and finished requests release their pages immediately
+(``--mode paged``, the default).  ``--mode dense`` keeps the plain
+dense-cache batched loop (:func:`generate`) as the reference path: one
+prefill, then one cache-append + attend per token — never a prompt re-run.
+
+The ``--plan`` surface is unchanged: pass an ActivationPlan JSON to pin
+exactly which sites run PWL/fused, ``--dump-plan`` to record the plan a
+run used.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -21,9 +29,11 @@ from repro.models import Model
 
 
 def generate(model: Model, params, prompts: jnp.ndarray, max_new: int = 32):
-    """Greedy decode `max_new` tokens for a batch of prompts."""
+    """Greedy-decode ``max_new`` tokens for a batch of prompts over a DENSE
+    per-request cache: prefill once, then one ``decode_step`` per token
+    (each step appends the token's K/V at its position and attends the
+    valid prefix — the prompt is never recomputed)."""
     B, S = prompts.shape
-    cfg = model.cfg
     cache = model.make_cache(B, max_len=S + max_new)
     logits, cache = jax.jit(model.prefill)(params, prompts, cache)
     out = []
@@ -36,17 +46,70 @@ def generate(model: Model, params, prompts: jnp.ndarray, max_new: int = 32):
     return jnp.concatenate(out, axis=1)
 
 
+def _serve_paged(model: Model, params, prompts: np.ndarray, args) -> int:
+    from repro.serving import GenRequest, PagedServingEngine
+
+    engine = PagedServingEngine(
+        model, params,
+        max_slots=args.max_slots,
+        page_size=args.page_size,
+        max_context=args.prompt_len + args.max_new + args.page_size,
+    )
+    requests = [
+        GenRequest(request_id=f"req{i}", prompt=list(map(int, prompts[i])),
+                   max_new_tokens=args.max_new)
+        for i in range(len(prompts))
+    ]
+    sfu.reset_fused_fallback_warnings()
+    t0 = time.time()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        results = engine.run(
+            requests,
+            on_result=lambda r: print(
+                f"[serve]   {r.request_id}: {len(r.tokens)} tokens "
+                f"({r.finish_reason}), steps {r.admitted_at_step}"
+                f"-{r.finished_at_step}"
+            ),
+        )
+    dt = time.time() - t0
+    fallbacks = [str(w.message) for w in caught
+                 if "fused" in str(w.message).lower()]
+    print(f"[serve] {len(results)} requests, {engine.generated} tokens in "
+          f"{dt:.2f}s ({engine.generated / dt:.1f} tok/s, "
+          f"{engine.decode_steps} batched decode steps, "
+          f"{engine.sched.allocator.num_free} pages free at exit)")
+    by_id = {r.request_id: r for r in results}
+    print("[serve] sample:", by_id["req0"].tokens[:12])
+    print(f"[serve] fused fallbacks during session: {len(fallbacks)}")
+    if fallbacks:
+        # a fused plan that silently fell back mid-session is a perf
+        # regression CI must catch, not a warning to scroll past
+        for msg in fallbacks:
+            print(f"[serve]   fallback: {msg}", file=sys.stderr)
+        return 1
+    return 0
+
+
 def serve(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="repro-100m")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="number of requests to serve")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--mode", choices=("paged", "dense"), default="paged",
+                    help="paged: continuous batching over the paged KV cache "
+                    "(repro.serving); dense: static-batch dense-cache loop")
+    ap.add_argument("--max-slots", type=int, default=4,
+                    help="[paged] concurrent batch slots (fixed decode shape)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="[paged] tokens per KV page")
     ap.add_argument(
         "--plan", default=None, metavar="PATH",
-        help="load an ActivationPlan JSON (repro.sfu); default: the jnp PWL "
-        "plan compiled from the arch config",
+        help="load an ActivationPlan JSON (repro.sfu); default: the fused "
+        "PWL plan compiled from the arch config",
     )
     ap.add_argument(
         "--dump-plan", default=None, metavar="PATH",
@@ -74,7 +137,9 @@ def serve(argv=None):
                 "from this arch's config with --dump-plan"
             )
     else:
-        cfg = getter(args.arch, act_impl="pwl")
+        # fused by default: serving is the subsystem the fused kernels were
+        # built for, and _serve_paged turns any silent fallback into rc=1
+        cfg = getter(args.arch, act_impl="pwl_fused")
     plan = sfu.plan_for(cfg)
     print(f"[serve] activation plan {plan.fingerprint}: "
           f"{ {k: s.impl for k, s in plan.items()} }")
@@ -82,12 +147,15 @@ def serve(argv=None):
         print(f"[serve] plan -> {sfu.dump_plan(plan, args.dump_plan)}")
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    prompts = jax.random.randint(
+    prompts = np.asarray(jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
-    ).astype(jnp.int32)
+    ), dtype=np.int32)
+
+    if args.mode == "paged":
+        return _serve_paged(model, params, prompts, args)
 
     t0 = time.time()
-    toks = generate(model, params, prompts, max_new=args.max_new)
+    toks = generate(model, params, jnp.asarray(prompts), max_new=args.max_new)
     dt = time.time() - t0
     n = args.batch * args.max_new
     print(f"[serve] generated {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s)")

@@ -451,6 +451,41 @@ def decode_attention(
     return out.reshape(B, 1, H, dh).astype(q.dtype)
 
 
+def paged_decode_attention(
+    q,           # (B, 1, H, dh)
+    k_pages,     # (Hkv, P, page_size, dh)
+    v_pages,     # (Hkv, P, page_size, dh)
+    page_table,  # (B, n_pages) int32
+    kv_len,      # (B,) int32 — tokens to attend (incl. the one just written)
+    exp_fn: Callable = jnp.exp,
+    softmax_table=None,
+):
+    """Single-position attention straight over a paged KV cache.
+
+    With ``softmax_table`` set (site ``attn.softmax:exp`` planned
+    ``impl="fused"``), the split-KV flash-decoding kernel gathers K/V
+    through the page table inside the kernel — no dense cache is ever
+    materialized, and work scales with the table's column count, not the
+    pool capacity.  Otherwise (exact/jnp/kernel plans) the pages are
+    gathered into logical order once and :func:`decode_attention` runs its
+    elementwise formulation — the unfused fallback the kernels/README
+    documents.
+    """
+    if softmax_table is not None:
+        from repro.kernels import fused
+
+        return fused.paged_flash_decode(
+            q, k_pages, v_pages, page_table, kv_len, table=softmax_table
+        )
+    from repro.serving.kv_cache import gather_pages
+
+    k_dense = gather_pages(k_pages, page_table)
+    v_dense = gather_pages(v_pages, page_table)
+    T = k_dense.shape[1]
+    valid = jnp.arange(T)[None, :] < kv_len[:, None]
+    return decode_attention(q, k_dense, v_dense, valid, exp_fn)
+
+
 # ---------------------------------------------------------------------------
 # sliced-q sharded attention (Perf H1, EXPERIMENTS.md Sec. Perf)
 
@@ -643,10 +678,14 @@ def attention_layer(
     kind: str = "attn",        # attn | attn_local | attn_global
     positions=None,            # (B, S) absolute positions
     cache=None,                # dict(k, v, ...) for decode, or None
-    cache_pos=None,            # scalar int — write offset for decode
+    cache_pos=None,            # scalar int — or (B,) per-request positions
+    #                            (continuous batching: each slot at its own
+    #                            depth), write offset for decode
     cross_kv=None,             # (k, v) for cross-attention (whisper)
     use_rope: bool = True,
     plan=None,                 # repro.sfu.ActivationPlan (softmax-exp site)
+    paged=None,                # dict(page_table, kv_len) — serving's paged
+    #                            KV cache (cache holds k_pages/v_pages)
 ):
     """Returns (y, new_cache).  Train/prefill when cache is None or a fresh
     buffer being filled; decode when x has seq_len 1 and cache is given."""
@@ -670,7 +709,11 @@ def attention_layer(
         k, v = cross_kv
 
     if positions is None:
-        positions = jnp.arange(S)[None, :] + (0 if cache_pos is None else cache_pos)
+        off = 0 if cache_pos is None else cache_pos
+        if getattr(off, "ndim", 0) == 1:  # per-request depths (serving)
+            positions = off[:, None] + jnp.arange(S)[None, :]
+        else:
+            positions = jnp.arange(S)[None, :] + off
         positions = jnp.broadcast_to(positions, (B, S))
     theta = cfg.rope_theta
     if use_rope and cross_kv is None:
@@ -679,7 +722,41 @@ def attention_layer(
 
     q = constrain(q, "batch", "act_seq", "act_heads", None)
 
-    if cache is not None and cross_kv is None:
+    if cache is not None and "k_pages" in cache:
+        # paged KV cache (repro.serving): k/v live in a shared page pool,
+        # the per-request page table maps logical position -> physical slot.
+        from repro.serving import kv_cache as _pg
+
+        page_table = paged["page_table"]
+        if S == 1:
+            # decode: in-place append at kv_len, then attend the kv_len+1
+            # prefix through the page table (split-KV kernel when the
+            # softmax site is planned fused, gather fallback otherwise).
+            # Inactive batch slots (all-sentinel table rows, kv_len == 0)
+            # append into the sentinel page and read back one garbage row —
+            # finite and discarded by the scheduler.
+            kv_len = paged["kv_len"]
+            k_pages, v_pages = _pg.append_kv(
+                cache["k_pages"], cache["v_pages"], k, v, page_table, kv_len
+            )
+            new_cache = {"k_pages": k_pages, "v_pages": v_pages}
+            y = paged_decode_attention(
+                q, k_pages, v_pages, page_table, kv_len + 1, exp_fn,
+                softmax_table=_softmax_fused_table(plan),
+            )
+        else:
+            # prefill: write the prompt's K/V into the table's pages (whole
+            # pages — the engine buckets prompts to a page multiple) and
+            # attend causally over the in-flight k/v, never via the pool.
+            k_pages, v_pages = _pg.write_prompt_pages(
+                cache["k_pages"], cache["v_pages"], k, v, page_table
+            )
+            new_cache = {"k_pages": k_pages, "v_pages": v_pages}
+            y = _attn_softmax_dispatch(
+                cfg, q, k, v, causal=True, window=window, exp_fn=exp_fn,
+                plan=plan,
+            )
+    elif cache is not None and cross_kv is None:
         # cache layout: full-length buffer for global layers; ring buffer of
         # size `window` for local layers (slot = pos % window).
         T = cache["k"].shape[1]

@@ -96,6 +96,22 @@ class Model:
     def decode_step(self, params, tokens, cache, pos):
         return self._impl.decode_step(self.cfg, params, tokens, cache, pos)
 
+    # -- paged serving (repro.serving; decoder-only transformers) -----------
+    def make_paged_cache(self, num_pages: int, page_size: int):
+        if self.cfg.is_encoder_decoder:
+            raise ValueError("paged serving covers decoder-only models")
+        return transformer.make_paged_cache(self.cfg, num_pages, page_size)
+
+    def prefill_paged(self, params, tokens, cache, page_table, lengths):
+        return transformer.prefill_paged(
+            self.cfg, params, tokens, cache, page_table, lengths
+        )
+
+    def decode_step_paged(self, params, tokens, cache, page_table, kv_len):
+        return transformer.decode_step_paged(
+            self.cfg, params, tokens, cache, page_table, kv_len
+        )
+
 
 def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
     """ShapeDtypeStruct stand-ins for one (arch x shape) dry-run cell."""

@@ -154,11 +154,13 @@ def model_defs(cfg: ModelConfig):
 
 
 def block_apply(cfg: ModelConfig, p, h, mixer: str, ffn: str, cache=None,
-                pos=None, plan=None):
+                pos=None, plan=None, paged=None):
     """Pre-norm residual block.  Returns (h, new_cache, aux_loss).
 
     ``plan`` is the compiled activation plan threaded down from the forward
-    entry points (one ``sfu.plan_for`` per trace, not per layer)."""
+    entry points (one ``sfu.plan_for`` per trace, not per layer);
+    ``paged`` is the serving path's shared {page_table, kv_len} (the
+    per-layer page pools ride in ``cache``)."""
     plan = plan if plan is not None else sfu.plan_for(cfg)
     hn = L.apply_norm(cfg, p["ln1"], h)
     if mixer == "ssm":
@@ -166,7 +168,7 @@ def block_apply(cfg: ModelConfig, p, h, mixer: str, ffn: str, cache=None,
     else:
         y, new_cache = L.attention_layer(
             cfg, p["mixer"], hn, kind=mixer, cache=cache, cache_pos=pos,
-            plan=plan,
+            plan=plan, paged=paged,
         )
     h = h + y
     hn2 = L.apply_norm(cfg, p["ln2"], h)
@@ -315,18 +317,20 @@ def make_cache(cfg: ModelConfig, batch: int, max_len: int):
     return init_params(cache_defs(cfg, batch, max_len), jax.random.PRNGKey(0))
 
 
-def _scan_with_cache(cfg: ModelConfig, params, h, cache, pos):
+def _scan_with_cache(cfg: ModelConfig, params, h, cache, pos, paged=None):
     kinds = cfg.layer_kinds
     period = cfg.period
     plan = sfu.plan_for(cfg)
 
+    # `paged` (page_table + kv_len) is shared by every layer, so it enters
+    # the scan body as a closure constant, not a scanned xs leaf
     def period_fn(h, xs):
         stacked, cache_p = xs
         new_caches = []
         for j in range(period):
             h, nc, _ = block_apply(
                 cfg, stacked[j], h, *kinds[j], cache=cache_p[j], pos=pos,
-                plan=plan,
+                plan=plan, paged=paged,
             )
             new_caches.append(nc)
         return h, new_caches
@@ -357,5 +361,72 @@ def decode_step(cfg: ModelConfig, params, tokens, cache, pos):
     """One-token decode.  tokens: (B, 1); pos: scalar absolute position."""
     h = embed_tokens(cfg, params, tokens)
     h, new_cache = _scan_with_cache(cfg, params, h, cache, pos=pos)
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    return unembed(cfg, params, h), new_cache
+
+
+# ---------------------------------------------------------------------------
+# paged serving entry points (repro.serving)
+
+
+def make_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int):
+    """Per-layer paged KV pools (serving).  Same pytree structure the scan
+    expects — one {k_pages, v_pages} dict per period slot, each leaf stacked
+    (n_periods, Hkv, num_pages, page_size, dh) — but the pools are SHARED
+    across requests through a page table rather than sliced per batch row.
+    Paged serving covers global-attention stacks only (ring-buffer local
+    layers and SSM states have no paged layout); mixed stacks raise here,
+    and the engine falls back to the dense cache path.
+    """
+    for mixer, _ in cfg.layer_kinds:
+        if mixer != "attn":
+            raise ValueError(
+                f"paged serving supports global-attention mixers only, got "
+                f"{mixer!r} in layer_kinds"
+            )
+    if num_pages < 2:
+        raise ValueError("num_pages must be >= 2 (page 0 is the sentinel)")
+    n_periods = cfg.n_layers // cfg.period
+    Hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    shape = (n_periods, Hkv, num_pages, page_size, dh)
+    return [
+        {"k_pages": jnp.zeros(shape, cfg.dtype),
+         "v_pages": jnp.zeros(shape, cfg.dtype)}
+        for _ in range(cfg.period)
+    ]
+
+
+def prefill_paged(cfg: ModelConfig, params, tokens, cache, page_table,
+                  lengths):
+    """Prompt prefill into a paged cache.  tokens: (B, S) with S a multiple
+    of the page size (engine-bucketed; rows padded past ``lengths`` are
+    causal-masked by position).  Returns (logits at position lengths-1,
+    cache) — the logits of each request's true last prompt token.
+    """
+    h = embed_tokens(cfg, params, tokens)
+    h, new_cache = _scan_with_cache(
+        cfg, params, h, cache, pos=0, paged={"page_table": page_table}
+    )
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    logits = unembed(cfg, params, h)  # (B, S, V)
+    idx = jnp.clip(lengths - 1, 0, logits.shape[1] - 1)[:, None, None]
+    last = jnp.take_along_axis(
+        logits, jnp.broadcast_to(idx, (logits.shape[0], 1, logits.shape[2])),
+        axis=1,
+    )
+    return last, new_cache
+
+
+def decode_step_paged(cfg: ModelConfig, params, tokens, cache, page_table,
+                      kv_len):
+    """One-token decode over the paged cache.  tokens: (B, 1);
+    kv_len: (B,) per-request depths (the new token's position — continuous
+    batching runs every slot at its own depth).  Appends in place, attends
+    through the page table.  Returns (logits, cache)."""
+    h = embed_tokens(cfg, params, tokens)
+    h, new_cache = _scan_with_cache(
+        cfg, params, h, cache, pos=kv_len,
+        paged={"page_table": page_table, "kv_len": kv_len},
+    )
     h = L.apply_norm(cfg, params["final_norm"], h)
     return unembed(cfg, params, h), new_cache

@@ -1,0 +1,32 @@
+"""`repro.serving` — paged KV cache, continuous batching, serving engine.
+
+The serving layer turns the fused-kernel arc into a system: a fixed pool
+of page-sized KV blocks shared across requests (:mod:`.kv_cache`), a
+continuous-batching scheduler that admits/evicts between decode steps at
+fixed batch shapes (:mod:`.scheduler`), and an engine that drives prefill
+through the fused flash kernel and decode through the split-KV paged
+decoding kernel (:mod:`.engine`).
+"""
+from .engine import PagedServingEngine
+from .kv_cache import (
+    SENTINEL_PAGE,
+    PageAllocator,
+    append_kv,
+    gather_pages,
+    make_page_pool,
+    write_prompt_pages,
+)
+from .scheduler import ContinuousBatchingScheduler, GenRequest, GenResult
+
+__all__ = [
+    "SENTINEL_PAGE",
+    "PageAllocator",
+    "PagedServingEngine",
+    "ContinuousBatchingScheduler",
+    "GenRequest",
+    "GenResult",
+    "append_kv",
+    "gather_pages",
+    "make_page_pool",
+    "write_prompt_pages",
+]

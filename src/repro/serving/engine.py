@@ -1,0 +1,159 @@
+"""PagedServingEngine: device half of the serving stack.
+
+Owns the page pools, the host page-table / kv_len mirrors, and the jitted
+model entry points; drives :class:`~repro.serving.scheduler.
+ContinuousBatchingScheduler` through the admit -> prefill -> decode ->
+evict loop.  Two shape disciplines keep the whole session on a handful of
+compiled programs instead of one per admission:
+
+* **bucketed prefill** — prompts run one-at-a-time (B=1) padded to the
+  next power-of-two multiple of the page size, so a mixed workload
+  compiles one prefill program per bucket (log2 many), not per length.
+  Pad positions write K/V into pages past the prompt's allocation — i.e.
+  into the sentinel page — and are never attended (position >= kv_len).
+* **bucketed decode columns** — every decode step runs ALL ``max_slots``
+  batch slots at a fixed shape; only the page-table *width* varies, and it
+  is bucketed to the next power of two over the widest live request.  This
+  is what makes decode work scale with the *live* cache: a pool sized for
+  500k tokens serving 2k-token requests dispatches a grid over
+  ceil(2k/page) columns, and admission/eviction never triggers a
+  recompile (it only rewrites one table row).
+
+Inactive slots are encoded entirely in data: an all-sentinel table row and
+``kv_len == 0``.  Their decode lane appends into the sentinel page, reads
+back one garbage row, and produces logits the scheduler never samples —
+dead lanes cost one page of work each, the price of a fixed batch shape.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import Model
+
+from .scheduler import ContinuousBatchingScheduler, GenRequest, GenResult
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1)).bit_length()
+
+
+class PagedServingEngine:
+    def __init__(
+        self,
+        model: Model,
+        params,
+        *,
+        max_slots: int = 8,
+        page_size: int = 16,
+        max_context: int = 512,
+        num_pages: Optional[int] = None,
+    ):
+        if page_size & (page_size - 1):
+            raise ValueError(f"page_size must be a power of two, got {page_size}")
+        self.model = model
+        self.params = params
+        self.page_size = page_size
+        self.max_slots = max_slots
+        self.max_cols = -(-max_context // page_size)
+        if num_pages is None:
+            # worst case: every slot at max_context, plus the sentinel
+            num_pages = max_slots * self.max_cols + 1
+        self.cache = model.make_paged_cache(num_pages, page_size)
+        self.sched = ContinuousBatchingScheduler(max_slots, page_size, num_pages)
+        # host mirrors: the scheduler mutates these between device steps
+        self.page_table = np.zeros((max_slots, self.max_cols), np.int32)
+        self.kv_len = np.zeros((max_slots,), np.int32)
+        self._cur = np.zeros((max_slots,), np.int32)  # next decode input
+        self._prefill_fn = jax.jit(model.prefill_paged)
+        self._decode_fn = jax.jit(model.decode_step_paged)
+        self.decode_steps = 0
+        self.generated = 0
+
+    # -- internals ----------------------------------------------------------
+    def _prefill(self, slot: int, req: GenRequest, pages: list[int]) -> bool:
+        """Write the page-table row, run bucketed prefill, sample the first
+        token.  Returns True when the request finished AT prefill."""
+        n = len(req.prompt)
+        bucket = max(self.page_size, _next_pow2(n))
+        npg = bucket // self.page_size
+        row = np.zeros((self.max_cols,), np.int32)
+        row[: len(pages)] = pages
+        self.page_table[slot] = row
+        self.kv_len[slot] = n
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :n] = req.prompt
+        logits, self.cache = self._prefill_fn(
+            self.params, jnp.asarray(toks), self.cache,
+            jnp.asarray(row[None, :npg]), jnp.asarray([n], jnp.int32),
+        )
+        tok = int(np.asarray(jnp.argmax(logits[0, 0])))
+        self._cur[slot] = tok
+        self.generated += 1
+        if self.sched.record_prefill_token(slot, tok):
+            self._evict(slot)
+            return True
+        return False
+
+    def _evict(self, slot: int) -> GenResult:
+        res = self.sched.evict(slot)
+        self.page_table[slot] = 0
+        self.kv_len[slot] = 0
+        self._cur[slot] = 0
+        return res
+
+    def decode_step(self) -> list[int]:
+        """One batched decode step over every slot (active or not).  Appends
+        each active slot's pending token, samples the next, advances the
+        scheduler.  Returns the slots that finished this step."""
+        active = self.sched.active_slots()
+        for i in active:
+            page = self.sched.grow(i)
+            if page is not None:
+                self.page_table[i, len(self.sched.slot(i).pages) - 1] = page
+        width = max((len(self.sched.slot(i).pages) for i in active), default=1)
+        n_cols = min(_next_pow2(width), self.max_cols)
+        logits, self.cache = self._decode_fn(
+            self.params, jnp.asarray(self._cur[:, None]), self.cache,
+            jnp.asarray(self.page_table[:, :n_cols]),
+            jnp.asarray(self.kv_len),
+        )
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1)).astype(np.int32)
+        self.sched.tick()
+        self.decode_steps += 1
+        finished = []
+        for i in active:
+            done = self.sched.append_token(i, int(nxt[i]))
+            self.kv_len[i] += 1
+            self._cur[i] = nxt[i]
+            self.generated += 1
+            if done:
+                self._evict(i)
+                finished.append(i)
+        return finished
+
+    # -- public loop ---------------------------------------------------------
+    def run(
+        self,
+        requests: list[GenRequest],
+        on_result: Optional[Callable[[GenResult], None]] = None,
+    ) -> list[GenResult]:
+        """Serve ``requests`` to completion under continuous batching and
+        return their results in finish order."""
+        for r in requests:
+            self.sched.submit(r)
+        n_before = len(self.sched.results())
+        while self.sched.has_work():
+            for slot, req, pages in self.sched.admit():
+                self._prefill(slot, req, pages)
+            if self.sched.active_slots():
+                self.decode_step()
+            if on_result is not None:
+                for res in self.sched.results()[n_before:]:
+                    on_result(res)
+                n_before = len(self.sched.results())
+        return self.sched.results()

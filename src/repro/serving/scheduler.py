@@ -1,0 +1,195 @@
+"""Continuous-batching scheduler: admit/evict between decode steps.
+
+Static batching decodes a batch in lockstep until its *longest* request
+finishes; every short request pads the batch with dead slots.  Continuous
+batching (Orca/vLLM) re-decides the batch **between decode steps**: a
+finished request releases its slot and pages immediately, and a queued
+request is admitted into the free slot at the very next step — the decode
+kernel never recompiles because the batch is a fixed array of
+``max_slots`` slots and admission only rewrites one page-table row and
+one ``kv_len`` entry.
+
+The scheduler is pure host-side bookkeeping (queue, slots, page
+accounting via :class:`~repro.serving.kv_cache.PageAllocator`, token
+lists, finish policy).  Device work — page pools, jitted prefill/decode,
+bucketing — lives in :class:`repro.serving.engine.PagedServingEngine`,
+which drives the loop:
+
+    admit() -> prefill admitted -> decode_step -> append_token per slot
+    -> collect_finished() -> repeat while has_work()
+
+Admission control is worst-case page reservation: a request is admitted
+only when the pool can cover its prompt pages PLUS every page its
+``max_new_tokens`` decode could ever grow into.  Reserved growth pages are
+not allocated up front (decode allocates them lazily at page boundaries);
+reserving the worst case keeps the lazy :meth:`grow` infallible, so a
+mid-decode request can never deadlock the pool — the classic alternative
+(optimistic admission + preemption/swap) needs an eviction-and-restart
+path this repo does not want on the hot loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+from .kv_cache import PageAllocator
+
+
+@dataclasses.dataclass
+class GenRequest:
+    """One generation request as submitted."""
+
+    request_id: str
+    prompt: list[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class GenResult:
+    """One finished request: the generated tokens plus scheduling telemetry."""
+
+    request_id: str
+    prompt: list[int]
+    tokens: list[int]
+    finish_reason: str          # "length" | "eos"
+    admitted_at_step: int       # decode-step index when admitted
+    finished_at_step: int
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: GenRequest
+    pages: list[int]            # physical pages held (logical order)
+    kv_len: int = 0             # valid tokens in the paged cache
+    tokens: Optional[list[int]] = None
+    admitted_at_step: int = 0
+
+    def __post_init__(self):
+        if self.tokens is None:
+            self.tokens = []
+
+
+class ContinuousBatchingScheduler:
+    def __init__(self, max_slots: int, page_size: int, num_pages: int):
+        self.max_slots = max_slots
+        self.page_size = page_size
+        self.allocator = PageAllocator(num_pages)
+        self.queue: deque[GenRequest] = deque()
+        self.slots: list[Optional[_Slot]] = [None] * max_slots
+        self.step = 0               # decode-step counter (for telemetry)
+        self._reserved = 0          # growth pages promised to admitted reqs
+        self._finished: list[GenResult] = []
+
+    # -- introspection -----------------------------------------------------
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+    def active_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    def slot(self, i: int) -> _Slot:
+        s = self.slots[i]
+        assert s is not None, f"slot {i} is empty"
+        return s
+
+    # -- queue / admission -------------------------------------------------
+    def submit(self, req: GenRequest) -> None:
+        if not req.prompt:
+            raise ValueError(f"request {req.request_id!r} has an empty prompt")
+        self.queue.append(req)
+
+    def _pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def admit(self) -> list[tuple[int, GenRequest, list[int]]]:
+        """Admit queued requests into free slots, FIFO, while the pool can
+        reserve each request's worst case.  Returns
+        ``[(slot_idx, request, prompt_pages), ...]`` for the engine to
+        prefill; the prompt pages are already allocated, the growth pages
+        only reserved.  FIFO head-of-line blocking is deliberate: skipping
+        a big request to admit later small ones starves it forever under
+        steady load."""
+        out = []
+        for i in range(self.max_slots):
+            if self.slots[i] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            worst = self._pages_for(len(req.prompt) + req.max_new_tokens)
+            prompt_pages = self._pages_for(len(req.prompt))
+            if worst > self.allocator.num_free - self._reserved:
+                break  # FIFO: wait for evictions rather than skip ahead
+            self.queue.popleft()
+            pages = self.allocator.alloc(prompt_pages)
+            self._reserved += worst - prompt_pages
+            self.slots[i] = _Slot(
+                request=req, pages=pages, kv_len=len(req.prompt),
+                admitted_at_step=self.step,
+            )
+            out.append((i, req, pages))
+        return out
+
+    # -- decode-step bookkeeping --------------------------------------------
+    def grow(self, i: int) -> Optional[int]:
+        """Allocate the page the NEXT appended token needs, if the slot's
+        current pages don't cover position ``kv_len``.  Draws down this
+        request's reservation, so it cannot fail after admission."""
+        s = self.slot(i)
+        if s.kv_len < len(s.pages) * self.page_size:
+            return None
+        page = self.allocator.alloc(1)[0]
+        self._reserved -= 1
+        s.pages.append(page)
+        return page
+
+    def tick(self) -> None:
+        """Advance the decode-step counter (telemetry only)."""
+        self.step += 1
+
+    def _finished_by(self, s: _Slot, token: int) -> bool:
+        req = s.request
+        return (len(s.tokens) >= req.max_new_tokens
+                or (req.eos_id is not None and token == req.eos_id))
+
+    def record_prefill_token(self, i: int, token: int) -> bool:
+        """Record the token sampled from the PREFILL logits.  Its K/V is not
+        in the cache yet (the next decode step appends it), so ``kv_len``
+        does not move.  Returns True when the request is already finished
+        (``max_new_tokens == 1`` or an immediate EOS)."""
+        s = self.slot(i)
+        s.tokens.append(token)
+        return self._finished_by(s, token)
+
+    def append_token(self, i: int, token: int) -> bool:
+        """Record one token sampled from a DECODE step.  That step appended
+        the *previous* token's K/V at position ``kv_len``, so the valid
+        length advances by one.  Returns True when the request just
+        finished."""
+        s = self.slot(i)
+        s.kv_len += 1
+        s.tokens.append(token)
+        return self._finished_by(s, token)
+
+    def evict(self, i: int) -> GenResult:
+        """Release slot ``i``: free its pages, drop its remaining
+        reservation, emit the result."""
+        s = self.slot(i)
+        req = s.request
+        worst = self._pages_for(len(req.prompt) + req.max_new_tokens)
+        self._reserved -= worst - len(s.pages)
+        self.allocator.free(s.pages)
+        self.slots[i] = None
+        reason = ("eos" if req.eos_id is not None and s.tokens
+                  and s.tokens[-1] == req.eos_id
+                  and len(s.tokens) < req.max_new_tokens else "length")
+        res = GenResult(
+            request_id=req.request_id, prompt=list(req.prompt),
+            tokens=list(s.tokens), finish_reason=reason,
+            admitted_at_step=s.admitted_at_step, finished_at_step=self.step,
+        )
+        self._finished.append(res)
+        return res
+
+    def results(self) -> list[GenResult]:
+        return list(self._finished)
