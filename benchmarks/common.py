@@ -9,20 +9,30 @@ import jax
 import jax.numpy as jnp
 
 
-def provenance(quick: bool = False) -> dict:
+def provenance(quick: bool = False, mesh=None) -> dict:
     """The provenance block every ``BENCH_*.json`` embeds at top level.
 
     ``backend``/``interpret_mode`` are the load-bearing fields: on any
     non-TPU backend the Pallas kernels run in interpret mode, so latency
     numbers are validation-only and must never be read as TPU latencies
     (ROADMAP flags this).  ``device``/``jax_version`` pin the machine, and
-    ``quick`` marks CI-smoke shapes.
+    ``quick`` marks CI-smoke shapes.  ``device_count``/``mesh`` pin the
+    topology: per-shard fused dispatch means a number measured on a 2x2
+    mesh is not comparable to a single-device run of the same shape.
+    Pass ``mesh`` explicitly, or it is read from the active sharding rules.
     """
     backend = jax.default_backend()
+    if mesh is None:
+        from repro.distributed.sharding import active_rules
+
+        rules = active_rules()
+        mesh = rules.mesh if rules is not None else None
     return {
         "backend": backend,
         "interpret_mode": backend != "tpu",
         "device": jax.devices()[0].device_kind,
+        "device_count": jax.device_count(),
+        "mesh": dict(mesh.shape) if mesh is not None else None,
         "jax_version": jax.__version__,
         "unix_time": int(time.time()),
         "quick": bool(quick),

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import contextvars
 import dataclasses
+import warnings
 from typing import Optional
 
 import jax
@@ -57,6 +58,42 @@ _ACTIVE: contextvars.ContextVar[Optional[Rules]] = contextvars.ContextVar(
 )
 
 
+def active_rules() -> Optional[Rules]:
+    """The Rules activated by the innermost ``use_rules`` (or None)."""
+    return _ACTIVE.get()
+
+
+def active_mesh_rules() -> Optional[Rules]:
+    """The active Rules when they carry a real multi-device mesh.
+
+    This is the shard-aware dispatch predicate: fused (Pallas) call sites ask
+    for it and, when non-None, wrap the kernel in ``shard_map`` with per-shard
+    specs derived from the rules (see ``repro.distributed.shard_fused``).
+    Returns None for no rules, no mesh, or a 1-device mesh — those cases run
+    the kernel directly (GSPMD has nothing to partition)."""
+    rules = _ACTIVE.get()
+    if rules is not None and rules.mesh is not None and rules.mesh.size > 1:
+        return rules
+    return None
+
+
+def spec_axes(rules: Rules, logical_axis: Optional[str]) -> tuple[str, ...]:
+    """Physical mesh axes one logical axis maps to under `rules` (may be ())."""
+    if logical_axis is None:
+        return ()
+    entry = rules.spec(logical_axis)[0]
+    if entry is None:
+        return ()
+    return entry if isinstance(entry, tuple) else (entry,)
+
+
+def logical_extent(rules: Rules, logical_axis: Optional[str]) -> int:
+    """Product of mesh-axis sizes a logical axis shards over (1 = replicated)."""
+    if rules.mesh is None:
+        return 1
+    return _axis_size(rules.mesh, spec_axes(rules, logical_axis) or None)
+
+
 class use_rules:
     """Context manager activating a Rules table for `constrain` calls."""
 
@@ -81,16 +118,43 @@ def _axis_size(mesh, entry) -> int:
     return n
 
 
+# (axis entry, shape) pairs sanitize_spec already reported — dropping a spec
+# entry silently replicates the array, which for params is a real perf bug
+# the user should see exactly once, not a warning storm on every trace.
+_SANITIZE_WARNED: set = set()
+
+
 def sanitize_spec(mesh, spec: P, shape) -> P:
     """Drop spec entries whose mesh-axis product doesn't divide the dim —
     keeps ragged dims (1500-frame encoders, S=1 decode, odd vocabs when
-    unpadded) compiling instead of erroring, at the cost of replication."""
+    unpadded) compiling instead of erroring, at the cost of replication.
+    Each dropped (axis entry, shape) pair is reported once per process so
+    mis-sharded params are visible instead of silently replicated."""
     out = []
     for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
         if entry is not None and dim % _axis_size(mesh, entry) != 0:
+            key = (
+                tuple(entry) if isinstance(entry, (tuple, list)) else entry,
+                tuple(shape),
+            )
+            # dim 1 is trivially unshardable (B=1 prefill, S=1 decode):
+            # replicating it is a no-op, not a mis-sharding worth a warning
+            if dim > 1 and key not in _SANITIZE_WARNED:
+                _SANITIZE_WARNED.add(key)
+                warnings.warn(
+                    f"sharding spec entry {entry!r} (mesh extent "
+                    f"{_axis_size(mesh, entry)}) does not divide dim {dim} of "
+                    f"shape {tuple(shape)}; replicating that dim instead",
+                    stacklevel=2,
+                )
             entry = None
         out.append(entry)
     return P(*out)
+
+
+def reset_sanitize_warnings() -> None:
+    """Clear the sanitize_spec warn-once state (tests)."""
+    _SANITIZE_WARNED.clear()
 
 
 def constrain(x, *logical_axes):

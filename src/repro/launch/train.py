@@ -4,7 +4,7 @@ checkpoint/restart, preemption handling, and straggler monitoring.
 Usage (host-scale example; the same code path drives the pod-scale mesh):
 
   PYTHONPATH=src python -m repro.launch.train --arch repro-100m --steps 200 \
-      --batch 8 --seq 512 --ckpt-dir /tmp/ckpt --act-impl pwl
+      --batch 8 --seq 512 --ckpt-dir /tmp/ckpt --plan plan.json
 
 On a real fleet this process runs once per host (jax.distributed.initialize
 picks up the cluster env); here it drives however many devices the host has.
@@ -13,11 +13,9 @@ from __future__ import annotations
 
 import argparse
 import sys
-import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import sfu
 from repro.checkpoint.manager import CheckpointManager, install_sigterm_save
@@ -38,16 +36,48 @@ def train(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=512)
     ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--act-impl", default="exact", choices=list(sfu.LEGACY_IMPL))
-    ap.add_argument("--act-breakpoints", type=int, default=32)
+    ap.add_argument(
+        "--plan", default=None, metavar="PATH",
+        help="load an ActivationPlan JSON (repro.sfu); default: the arch "
+        "config's own plan",
+    )
+    ap.add_argument(
+        "--dump-plan", default=None, metavar="PATH",
+        help="write the exact activation plan this run uses as JSON",
+    )
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--model-parallel", type=int, default=1)
+    # removed flags, kept one release as hard errors with a pointer
+    ap.add_argument("--act-impl", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--act-breakpoints", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
+    if args.act_impl is not None or args.act_breakpoints is not None:
+        ap.error(
+            "--act-impl/--act-breakpoints were removed: pass --plan "
+            "<plan.json> instead (dump one with --dump-plan or "
+            "sfu.dump_plan(sfu.compile_plan(cfg), path); see docs/plans.md)"
+        )
 
     getter = get_reduced_config if args.reduced else get_config
-    cfg = getter(args.arch, act_impl=args.act_impl, act_breakpoints=args.act_breakpoints)
+    if args.plan:
+        loaded = sfu.load_plan(args.plan)
+        cfg = getter(args.arch, act_plan=loaded)
+        missing = sfu.plan_missing_sites(cfg, loaded)
+        if missing:
+            ap.error(
+                f"--plan {args.plan} lacks specs for activation sites "
+                f"{missing} that arch '{args.arch}' instantiates — dump one "
+                "from this arch's config with --dump-plan"
+            )
+    else:
+        cfg = getter(args.arch)
+    plan = sfu.plan_for(cfg)
+    print(f"[train] activation plan {plan.fingerprint}: "
+          f"{ {k: s.impl for k, s in plan.items()} }", flush=True)
+    if args.dump_plan:
+        print(f"[train] plan -> {sfu.dump_plan(plan, args.dump_plan)}", flush=True)
     mesh = make_host_mesh(model=args.model_parallel)
     cell = ShapeCell("host", args.seq, args.batch, "train")
     opt_cfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps, warmup_steps=max(args.steps // 20, 5))

@@ -12,16 +12,22 @@ Sliding-window layers dynamic-slice the KV to [q_start-window, q_end), making
 local attention O(S * window) compute instead of O(S^2).
 
 When the plan compiles ``attn.softmax:exp`` with ``impl="fused"`` (paper
-Sec. V-B), attention executes fused on a single device for EVERY shape:
-small problems take the dense PWL-exp softmax kernel
-(``kernels/fused/softmax.py``, gated by ``DENSE_FUSED_SOFTMAX_MAX_SCORES``
-/ ``_MAX_WIDTH`` / the window-coverage crossover as a fast path), and
-everything past those thresholds — long-context prefill/train, narrow
-sliding windows, wide decode caches — runs the fused flash-attention
-kernel with the PWL-exp online softmax
-(``kernels/fused/attention.py``).  The only remaining dynamic fallback to
-the pure-JAX flash path is a multi-device mesh
-(``sfu.mesh_blocks_fused``, warn-once).
+Sec. V-B), attention executes fused for EVERY shape: small problems take
+the dense PWL-exp softmax kernel (``kernels/fused/softmax.py``, gated by
+``DENSE_FUSED_SOFTMAX_MAX_SCORES`` / ``_MAX_WIDTH`` / the window-coverage
+crossover as a fast path), and everything past those thresholds —
+long-context prefill/train, narrow sliding windows, wide decode caches —
+runs the fused flash-attention kernel with the PWL-exp online softmax
+(``kernels/fused/attention.py``).  Under a multi-device mesh the same
+executors run **per shard** inside ``shard_map`` (GSPMD cannot partition a
+``pallas_call``): heads shard over the rules' model axis, batch over the
+data axes, PWL tables replicate as closed-over constants, and the executor
+choice is made on per-shard shapes (see ``repro.distributed.shard_fused``
+and docs/distributed.md).  The one genuinely unsupported layout — a decode
+KV cache sharded over the *sequence* axis (``cache_seq``, the
+seq-parallel-attention rules) — falls back to the unfused path, whose
+psum-partitioned contraction actually honors that sharding, and says so
+once via ``sfu.warn_fused_fallback``.
 """
 from __future__ import annotations
 
@@ -33,7 +39,8 @@ import jax
 import jax.numpy as jnp
 
 from repro import sfu
-from repro.distributed.sharding import constrain
+from repro.distributed import shard_fused as shf
+from repro.distributed.sharding import active_mesh_rules, constrain, logical_extent
 
 from .common import ModelConfig
 
@@ -156,20 +163,17 @@ DENSE_FUSED_SOFTMAX_MAX_WIDTH = 32768
 
 def _softmax_fused_table(plan):
     """Table for the fused PWL-exp softmax kernels (dense or flash), or None
-    when attention must use the pure-JAX flash/online path: site absent or
-    not planned fused, or a multi-device mesh is active (GSPMD cannot
-    partition a ``pallas_call`` — the one remaining dynamic fallback, warned
-    once via ``sfu.mesh_blocks_fused``).  The single fused-softmax decision
-    point, mirroring ``plan.fused_table`` for producer epilogues; which
-    fused kernel runs is a shape question decided by the caller
-    (``_attn_softmax_dispatch`` / ``decode_attention``)."""
+    when attention must use the pure-JAX flash/online path (site absent or
+    not planned fused).  The single fused-softmax decision point, mirroring
+    ``plan.fused_table`` for producer epilogues; which fused kernel runs —
+    and, under a mesh, which per-shard specs it runs with — is a shape
+    question decided by the caller (``_attn_softmax_dispatch`` /
+    ``decode_attention`` / ``paged_decode_attention``)."""
     if plan is None:
         return None
     key = sfu.site_key(sfu.SITE_SOFTMAX, "exp")
     spec = plan.get(key)
     if spec is None or spec.impl != "fused":
-        return None
-    if sfu.mesh_blocks_fused(key):
         return None
     return plan.fused_table(key)
 
@@ -393,6 +397,38 @@ def flash_attention(
     return out[:, :S].astype(q.dtype)
 
 
+def _decode_attention_fused(q, k_cache, v_cache, valid, table):
+    """Fused decode executor over one (local) cache block: the dense PWL-exp
+    softmax kernel while a cache row fits its VMEM-resident width, the fused
+    flash-attention kernel (blocked KV loop, ragged ``kv_valid_len``
+    masking) for wider caches — e.g. 500k-token decode.  Shapes here are
+    PER-SHARD under a mesh (called inside shard_map by
+    :func:`decode_attention`)."""
+    from repro.kernels import fused
+
+    B, _, H, dh = q.shape
+    T = k_cache.shape[1]
+    Hkv = k_cache.shape[2]
+    G = H // Hkv
+    if T > DENSE_FUSED_SOFTMAX_MAX_WIDTH:
+        return fused.fused_flash_attention(
+            q, k_cache, v_cache, table=table, causal=False,
+            kv_valid_len=jnp.sum(valid, axis=-1),
+        )
+    scale = 1.0 / math.sqrt(dh)
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, dh)
+    s = jnp.einsum(
+        "bhgd,bthd->bhgt", qf, k_cache.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ) * scale
+    p = fused.fused_pwl_softmax(s, table=table, mask=valid[:, None, None, :])
+    out = jnp.einsum(
+        "bhgt,bthd->bhgd", p, v_cache.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
 def decode_attention(
     q,        # (B, 1, H, dh)
     k_cache,  # (B, T, Hkv, dh)
@@ -405,11 +441,16 @@ def decode_attention(
 
     With ``softmax_table`` set (site ``attn.softmax:exp`` planned
     ``impl="fused"``), the row-max/PWL-exp/renormalize reduction runs as one
-    fused Pallas kernel: the dense softmax kernel while a cache row fits its
-    VMEM-resident width, the fused flash-attention kernel (blocked KV loop,
-    ragged ``kv_valid_len`` masking) for wider caches — e.g. 500k-token
-    decode.  Otherwise the elementwise ``exp_fn`` formulation below
-    (identical math — see kernels/fused/softmax.py).
+    fused Pallas kernel (:func:`_decode_attention_fused` picks dense vs
+    flash by cache width).  Under a multi-device mesh the fused executor
+    runs per-shard inside shard_map — heads over the model axis, batch over
+    the data axes.  The one layout it cannot shard is a cache sharded over
+    the SEQUENCE axis (``cache_seq``, seq-parallel-attention rules): there
+    the unfused contraction below is genuinely better (GSPMD partitions it
+    over the cache length with a psum, while the fused kernel would force
+    full-cache replication), so it warns once and falls back.  Otherwise the
+    elementwise ``exp_fn`` formulation below (identical math — see
+    kernels/fused/softmax.py).
 
     ``valid`` must be a prefix-or-full mask per batch row, which the ring
     and linear cache layouts in :func:`attention_layer` guarantee.
@@ -418,32 +459,46 @@ def decode_attention(
     T = k_cache.shape[1]
     Hkv = k_cache.shape[2]
     G = H // Hkv
-    if softmax_table is not None and T > DENSE_FUSED_SOFTMAX_MAX_WIDTH:
-        from repro.kernels import fused
+    if softmax_table is not None:
+        rules = active_mesh_rules()
+        if rules is None:
+            return _decode_attention_fused(q, k_cache, v_cache, valid,
+                                           softmax_table)
+        if logical_extent(rules, "cache_seq") > 1:
+            sfu.warn_fused_fallback(
+                sfu.site_key(sfu.SITE_SOFTMAX, "exp"),
+                "decode KV cache is sharded over the sequence axis "
+                "(cache_seq, seq-parallel attention rules); the unfused "
+                "psum-partitioned contraction honors that sharding, the "
+                "per-shard fused kernel would replicate the cache",
+            )
+            softmax_table = None
+        else:
+            b = shf.batch_entry(rules, B)
+            h, hk = _gqa_shard_entries(rules, "act_heads", H, "cache_kv", Hkv)
+            table = softmax_table
 
-        return fused.fused_flash_attention(
-            q, k_cache, v_cache, table=softmax_table, causal=False,
-            kv_valid_len=jnp.sum(valid, axis=-1),
-        )
+            def body(q_l, k_l, v_l, valid_l):
+                return _decode_attention_fused(q_l, k_l, v_l, valid_l, table)
+
+            return shf.run_sharded(
+                rules, body, (q, k_cache, v_cache, valid),
+                (shf.P(b, None, h, None), shf.P(b, None, hk, None),
+                 shf.P(b, None, hk, None), shf.P(b, None)),
+                shf.P(b, None, h, None),
+            )
     scale = 1.0 / math.sqrt(dh)
     qf = q.astype(jnp.float32).reshape(B, Hkv, G, dh)
     s = jnp.einsum(
         "bhgd,bthd->bhgt", qf, k_cache.astype(jnp.float32),
         preferred_element_type=jnp.float32,
     ) * scale
-    if softmax_table is not None:
-        from repro.kernels import fused
-
-        p = fused.fused_pwl_softmax(
-            s, table=softmax_table, mask=valid[:, None, None, :]
-        )
-    else:
-        s = jnp.where(valid[:, None, None, :], s, -1e30)
-        m = jnp.max(s, axis=-1, keepdims=True)
-        p = exp_fn(s - m)
-        p = jnp.where(valid[:, None, None, :], p, 0.0)
-        l = jnp.sum(p, axis=-1, keepdims=True)
-        p = p / jnp.maximum(l, 1e-30)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = exp_fn(s - m)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.maximum(l, 1e-30)
     out = jnp.einsum(
         "bhgt,bthd->bhgd", p, v_cache.astype(jnp.float32),
         preferred_element_type=jnp.float32,
@@ -468,15 +523,50 @@ def paged_decode_attention(
     materialized, and work scales with the table's column count, not the
     pool capacity.  Otherwise (exact/jnp/kernel plans) the pages are
     gathered into logical order once and :func:`decode_attention` runs its
-    elementwise formulation — the unfused fallback the kernels/README
+    elementwise formulation — the unfused fallback docs/distributed.md
     documents.
+
+    Under a multi-device mesh the split-KV kernel runs per-shard: the page
+    pools shard over KV heads (each rank owns whole pools for its head
+    slice), q over the matching head groups, page table and lengths shard
+    with the batch.  A pool sharded over ``cache_seq`` (seq-parallel rules)
+    is the one unsupported layout — the gather fallback's contraction
+    shards over the cache length, so it warns once and takes that path.
     """
     if softmax_table is not None:
         from repro.kernels import fused
 
-        return fused.paged_flash_decode(
-            q, k_pages, v_pages, page_table, kv_len, table=softmax_table
-        )
+        rules = active_mesh_rules()
+        if rules is None:
+            return fused.paged_flash_decode(
+                q, k_pages, v_pages, page_table, kv_len, table=softmax_table
+            )
+        if logical_extent(rules, "cache_seq") > 1:
+            sfu.warn_fused_fallback(
+                sfu.site_key(sfu.SITE_SOFTMAX, "exp"),
+                "paged KV pool is sharded over the sequence axis (cache_seq, "
+                "seq-parallel attention rules); the gather fallback's "
+                "contraction honors that sharding, the per-shard split-KV "
+                "kernel would replicate the pool",
+            )
+        else:
+            B, _, H, _ = q.shape
+            Hkv = k_pages.shape[0]
+            b = shf.batch_entry(rules, B)
+            h, hk = _gqa_shard_entries(rules, "act_heads", H, "cache_kv", Hkv)
+            table = softmax_table
+
+            def body(q_l, kp_l, vp_l, pt_l, len_l):
+                return fused.paged_flash_decode(
+                    q_l, kp_l, vp_l, pt_l, len_l, table=table
+                )
+
+            return shf.run_sharded(
+                rules, body, (q, k_pages, v_pages, page_table, kv_len),
+                (shf.P(b, None, h, None), shf.P(hk, None, None, None),
+                 shf.P(hk, None, None, None), shf.P(b, None), shf.P(b)),
+                shf.P(b, None, h, None),
+            )
     from repro.serving.kv_cache import gather_pages
 
     k_dense = gather_pages(k_pages, page_table)
@@ -562,18 +652,75 @@ def _dense_softmax_preferred(n_scores: int, width: int,
             and width <= DENSE_FUSED_SOFTMAX_MAX_WIDTH)
 
 
+def _gqa_shard_entries(rules, q_axis: str, H: int, kv_axis: str, Hkv: int):
+    """Spec entries for sharding (q heads, kv heads) together.
+
+    GQA folds G query heads onto each KV head, so a head split must keep
+    whole groups per shard: q and kv heads shard over the SAME mesh axes or
+    not at all.  Either dim not dividing its extent (or the two logical axes
+    mapping to different physical axes — custom rules) drops BOTH to
+    replicated, which is exactly what ``sanitize_spec`` does to the unfused
+    path's constraints for the same shapes."""
+    h = shf.dim_entry(rules, q_axis, H)
+    hk = shf.dim_entry(rules, kv_axis, Hkv)
+    if h != hk:
+        return None, None
+    return h, hk
+
+
+def _shard_fused_attention(cfg, q, k, v, *, causal, window, table, rules):
+    """Run the fused attention executors per-shard on the rules' mesh.
+
+    Heads shard over the model axis (whole GQA groups per rank), batch over
+    the data axes, K/V stay head-sharded alongside q — attention is
+    head-local so there is no psum.  The PWL table is closed over (packed
+    host-side at trace time; replicated to every rank as a constant).  The
+    dense-vs-flash executor choice is made on PER-SHARD shapes: what a rank
+    actually materializes is what the dense cap must bound."""
+    from repro.kernels import fused
+
+    B, _, H, _ = q.shape
+    Hkv = k.shape[2]
+    b = shf.batch_entry(rules, B)
+    h, hk = _gqa_shard_entries(rules, "act_heads", H, "act_kv", Hkv)
+
+    def body(q_l, k_l, v_l):
+        Bl, Sl, Hl = q_l.shape[0], q_l.shape[1], q_l.shape[2]
+        Tl = k_l.shape[1]
+        if _dense_softmax_preferred(Bl * Hl * Sl * Tl, Tl, window, Tl):
+            return dense_pwl_attention(q_l, k_l, v_l, table=table,
+                                       causal=causal, window=window)
+        return fused.fused_flash_attention(
+            q_l, k_l, v_l, table=table, causal=causal, window=window
+        )
+
+    return shf.run_sharded(
+        rules, body, (q, k, v),
+        (shf.P(b, None, h, None), shf.P(b, None, hk, None),
+         shf.P(b, None, hk, None)),
+        shf.P(b, None, h, None),
+    )
+
+
 def _attn_softmax_dispatch(cfg, q, k, v, *, causal, window, exp_fn, plan):
     """Attention entry for train/prefill/cross.  When the plan compiles the
-    ``attn.softmax:exp`` site ``impl="fused"`` (and no multi-device mesh
-    blocks Pallas dispatch), attention ALWAYS executes fused: the dense
-    PWL-exp softmax kernel for small problems, the fused flash-attention
-    kernel (PWL-exp online softmax) for everything else — long-context
-    prefill, narrow sliding windows, cross attention.  Otherwise the
-    pure-JAX flash path with the (possibly PWL) elementwise ``exp_fn``."""
+    ``attn.softmax:exp`` site ``impl="fused"``, attention ALWAYS executes
+    fused: the dense PWL-exp softmax kernel for small problems, the fused
+    flash-attention kernel (PWL-exp online softmax) for everything else —
+    long-context prefill, narrow sliding windows, cross attention.  Under a
+    multi-device mesh the same executors run per-shard inside shard_map
+    (:func:`_shard_fused_attention`).  Otherwise the pure-JAX flash path
+    with the (possibly PWL) elementwise ``exp_fn``."""
     B, S, H = q.shape[0], q.shape[1], q.shape[2]
     T = k.shape[1]
     table = _softmax_fused_table(plan)
     if table is not None:
+        rules = active_mesh_rules()
+        if rules is not None:
+            return _shard_fused_attention(
+                cfg, q, k, v, causal=causal, window=window, table=table,
+                rules=rules,
+            )
         if _dense_softmax_preferred(B * H * S * T, T, window, T):
             return dense_pwl_attention(q, k, v, table=table, causal=causal,
                                        window=window)
@@ -597,33 +744,67 @@ def _fused_mlp_hidden(cfg: ModelConfig, params, x, plan):
     """Fused-kernel hidden state for plan sites with ``impl="fused"``: the
     PWL activation runs as an epilogue inside the gemm that produced it
     (kernels/fused/), so the (tokens, d_ff) pre-activation never round-trips
-    HBM.  Returns None when this site must fall back to the unfused path:
-    site not planned fused (exempt / other impl), or a multi-device mesh is
-    active (GSPMD cannot partition a pallas_call, so the fused kernel would
-    force replicated compute/traffic the unfused path's sharding constraints
-    exist to avoid — per-shard fused dispatch via shard_map is a ROADMAP
-    item)."""
+    HBM.  Returns None when this site is not planned fused (exempt / other
+    impl).
+
+    Under a multi-device mesh the kernel runs per-shard inside shard_map:
+    d_ff columns shard over the rules' "mlp" axis (matching the unfused
+    path's ``constrain(h, "batch", None, "mlp")``), batch over the data
+    axes, and the weights' d_model rows replicate on entry — the same
+    per-use all-gather GSPMD performs for the FSDP-sharded unfused gemms.
+    The hidden is d_ff-local, so there is no psum.  A d_ff that doesn't
+    divide the mlp extent replicates the column dim instead (exactly what
+    ``sanitize_spec`` does to the unfused constraint for the same shape)."""
     key = sfu.site_key(sfu.SITE_MLP, cfg.activation)
     spec = plan.get(key)
     if spec is None or spec.impl != "fused":
         return None
     from repro.kernels import fused
 
-    if sfu.mesh_blocks_fused(key):
-        return None
     table = plan.fused_table(key)
     if table is None:
         return None
     dtype = x.dtype
+    rules = active_mesh_rules()
     if cfg.mlp_type in ("swiglu", "geglu"):
-        return fused.fused_glu(
-            x, params["w_gate"].astype(dtype), params["w_up"].astype(dtype),
-            table=table,
+        wg = params["w_gate"].astype(dtype)
+        wu = params["w_up"].astype(dtype)
+        if rules is None:
+            return fused.fused_glu(x, wg, wu, table=table)
+        b = shf.batch_entry(rules, x.shape[0])
+        f = shf.dim_entry(rules, "mlp", wg.shape[-1])
+
+        def glu_body(x_l, wg_l, wu_l):
+            return fused.fused_glu(x_l, wg_l, wu_l, table=table)
+
+        return shf.run_sharded(
+            rules, glu_body, (x, wg, wu),
+            (shf.P(b, None, None), shf.P(None, f), shf.P(None, f)),
+            shf.P(b, None, f),
         )
-    return fused.fused_linear(
-        x, params["w_in"].astype(dtype),
-        params["b_in"].astype(dtype) if "b_in" in params else None,
-        table=table,
+    w_in = params["w_in"].astype(dtype)
+    b_in = params["b_in"].astype(dtype) if "b_in" in params else None
+    if rules is None:
+        return fused.fused_linear(x, w_in, b_in, table=table)
+    b = shf.batch_entry(rules, x.shape[0])
+    f = shf.dim_entry(rules, "mlp", w_in.shape[-1])
+    if b_in is None:
+        def lin_body(x_l, w_l):
+            return fused.fused_linear(x_l, w_l, None, table=table)
+
+        return shf.run_sharded(
+            rules, lin_body, (x, w_in),
+            (shf.P(b, None, None), shf.P(None, f)),
+            shf.P(b, None, f),
+        )
+
+    def lin_bias_body(x_l, w_l, b_l):
+        return fused.fused_linear(x_l, w_l, b_l, table=table)
+
+    return shf.run_sharded(
+        rules, lin_bias_body, (x, w_in, b_in),
+        (shf.P(b, None, None), shf.P(None, f), shf.P(f)),
+        shf.P(b, None, f),
     )
 
 

@@ -7,13 +7,15 @@ dropped (residual passes through).
 
 Two execution paths:
 
-* **shard_map expert-parallel** (meshes with a >1 "model" axis): dispatch is
-  LOCAL per data shard, then one explicit ``all_to_all`` over the model axis
-  routes expert buckets to their owning rank, expert FFNs run on local expert
-  weights, and a second ``all_to_all`` brings outputs home.  Per-layer link
-  traffic is O(tokens x d_model) — the token volume itself.
+* **shard_map** (any multi-device mesh): dispatch is LOCAL per shard.  With
+  E divisible by the "model" extent, experts are parallel: tokens replicate
+  over the model axis, each rank builds capacity buckets for its own expert
+  slice, and one psum combines partial outputs (Perf H-MoE-2).  Otherwise
+  expert weights replicate over "model" and only the batch shards.  Either
+  way, fused-planned sites run the per-expert GLU Pallas kernel *inside*
+  the shard_map body on local expert slices.
 
-* **single-shard fallback** (tests, host meshes): plain local dispatch.
+* **single device** (tests, no mesh): plain local dispatch.
 
 The shard_map path exists because GSPMD's scatter partitioner cannot prove
 our dispatch local: it materializes each (E, C, D) buffer with a full
@@ -41,41 +43,43 @@ def moe_layer(cfg: ModelConfig, params, x, plan=None):
     """x: (B, S, D) -> (y: (B, S, D), aux_loss: scalar f32).
 
     The expert activation resolves through the activation plan (site
-    ``"moe.expert:<activation>"``).  Chooses the shard_map expert-parallel
-    path when an active Rules context provides a mesh with a non-trivial
-    "model" axis and E divides it.
+    ``"moe.expert:<activation>"``).  Under an active Rules mesh the layer
+    always runs inside shard_map: expert-parallel (weights sharded over the
+    "model" axis, replicated-token dispatch + psum combine — Perf H-MoE-2)
+    when E divides the model extent, replicated-expert otherwise (batch
+    still shards over the data axes).
 
     Sites planned ``impl="fused"`` run the expert gate/up gemms + PWL
-    activation + gating as ONE Pallas kernel (``kernels/fused/moe.py``) on
-    a single device; multi-device meshes fall back to the unfused einsums
-    (GSPMD cannot partition a pallas_call — per-shard fused dispatch inside
-    shard_map is a ROADMAP item) and say so once via
-    ``sfu.warn_fused_fallback``."""
+    activation + gating as ONE Pallas kernel (``kernels/fused/moe.py``) —
+    on a single device directly, and under a mesh *inside* the shard_map
+    body, on each rank's local expert slice (the PWL table is closed over
+    and replicated; the psum combine is the one the unfused math already
+    performs)."""
     plan = plan if plan is not None else sfu.plan_for(cfg)
     key = sfu.site_key(sfu.SITE_MOE, cfg.activation)
     spec = plan.get(key)
     planned_fused = spec is not None and spec.impl == "fused"
-    rules = _ACTIVE.get()
-    if rules is not None and rules.mesh is not None:
-        tp = dict(rules.mesh.shape).get("model", 1)
-        if tp > 1 and cfg.n_experts % tp == 0:
-            if planned_fused:
-                sfu.warn_fused_fallback(
-                    key, "expert-parallel shard_map path is active; "
-                    "per-shard fused dispatch is a ROADMAP item"
-                )
-            return _moe_layer_shardmap(cfg, params, x, rules, plan.act(key))
-    fused_table = None
-    if planned_fused and not sfu.mesh_blocks_fused(key):
-        fused_table = plan.fused_table(key)
+    fused_table = plan.fused_table(key) if planned_fused else None
     # the elementwise callable is only resolved (table fetch and all) on the
     # path that actually consumes it
     act = None if fused_table is not None else plan.act(key)
+    rules = _ACTIVE.get()
+    if rules is not None and rules.mesh is not None and rules.mesh.size > 1:
+        return _moe_layer_shardmap(cfg, params, x, rules, act,
+                                   fused_table=fused_table)
     return _moe_layer_local(cfg, params, x, act, fused_table=fused_table)
 
 
-def _moe_layer_shardmap(cfg: ModelConfig, params, x, rules, act):
-    """Expert-parallel MoE: local dispatch + explicit all_to_all (Perf H-MoE)."""
+def _moe_layer_shardmap(cfg: ModelConfig, params, x, rules, act,
+                        fused_table=None):
+    """MoE under a mesh: local dispatch per shard (Perf H-MoE).
+
+    Expert-parallel (`ep`) when E divides the "model" extent: expert weights
+    shard over "model", each rank builds capacity buckets for its own expert
+    slice, one psum combines partial outputs.  Otherwise expert weights
+    replicate over "model" and every model rank computes identically (the
+    same replication GSPMD's sanitized constraints produce) — still inside
+    shard_map so a fused-planned site keeps its Pallas kernel per shard."""
     mesh = rules.mesh
     axes = mesh.axis_names
     batch_axes = tuple(a for a in ("pod", "data") if a in axes)
@@ -84,12 +88,15 @@ def _moe_layer_shardmap(cfg: ModelConfig, params, x, rules, act):
     for a in batch_axes:
         dp *= mesh.shape[a]
     x_bspec = batch_axes if (batch_axes and B % dp == 0) else None
+    tp = dict(mesh.shape).get("model", 1)
+    ep = tp > 1 and cfg.n_experts % tp == 0
 
+    espec = P("model", None, None) if ep else P(None, None, None)
     pspecs = {
         "router": P(None, None),
-        "w_gate": P("model", None, None),
-        "w_up": P("model", None, None),
-        "w_down": P("model", None, None),
+        "w_gate": espec,
+        "w_up": espec,
+        "w_down": espec,
     }
 
     @functools.partial(
@@ -102,7 +109,9 @@ def _moe_layer_shardmap(cfg: ModelConfig, params, x, rules, act):
     def run(x_loc, p_loc):
         y, aux = _moe_local_dispatch(
             cfg, p_loc, x_loc, act,
-            ep_axis="model", ep_size=dict(mesh.shape)["model"],
+            ep_axis="model" if ep else None,
+            ep_size=tp if ep else 1,
+            fused_table=fused_table,
         )
         for a in batch_axes:
             aux = jax.lax.pmean(aux, a)

@@ -23,6 +23,15 @@ Inactive slots are encoded entirely in data: an all-sentinel table row and
 ``kv_len == 0``.  Their decode lane appends into the sentinel page, reads
 back one garbage row, and produces logits the scheduler never samples —
 dead lanes cost one page of work each, the price of a fixed batch shape.
+
+Pass ``rules`` (a :class:`repro.distributed.sharding.Rules` with a mesh) to
+serve sharded: the jitted prefill/decode entry points activate the rules,
+so every fused Pallas kernel — prompt/append page writes, flash prefill,
+split-KV paged decode — runs per-shard inside shard_map (KV-head / query-
+head dims over the model axis, pools replicated over data; see
+docs/distributed.md).  Each ``run()`` session resets the fused-fallback
+warn-once state first, so a session that falls back reports it even when a
+previous session on the same process already warned.
 """
 from __future__ import annotations
 
@@ -33,6 +42,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sfu
+from repro.distributed.sharding import use_rules
 from repro.models import Model
 
 from .scheduler import ContinuousBatchingScheduler, GenRequest, GenResult
@@ -52,6 +63,7 @@ class PagedServingEngine:
         page_size: int = 16,
         max_context: int = 512,
         num_pages: Optional[int] = None,
+        rules=None,  # repro.distributed.sharding.Rules — serve sharded
     ):
         if page_size & (page_size - 1):
             raise ValueError(f"page_size must be a power of two, got {page_size}")
@@ -69,8 +81,27 @@ class PagedServingEngine:
         self.page_table = np.zeros((max_slots, self.max_cols), np.int32)
         self.kv_len = np.zeros((max_slots,), np.int32)
         self._cur = np.zeros((max_slots,), np.int32)  # next decode input
-        self._prefill_fn = jax.jit(model.prefill_paged)
-        self._decode_fn = jax.jit(model.decode_step_paged)
+        self.rules = rules
+        if rules is None:
+            self._prefill_fn = jax.jit(model.prefill_paged)
+            self._decode_fn = jax.jit(model.decode_step_paged)
+        else:
+            # activate the sharding rules INSIDE the jitted computation so
+            # constrain() and the per-shard fused dispatch see them at trace
+            # time (the same pattern launch/steps.build_train_step uses)
+            @jax.jit
+            def _prefill(params, toks, cache, pt, lens):
+                with use_rules(rules):
+                    return model.prefill_paged(params, toks, cache, pt, lens)
+
+            @jax.jit
+            def _decode(params, toks, cache, pt, lens):
+                with use_rules(rules):
+                    return model.decode_step_paged(params, toks, cache, pt,
+                                                   lens)
+
+            self._prefill_fn = _prefill
+            self._decode_fn = _decode
         self.decode_steps = 0
         self.generated = 0
 
@@ -144,6 +175,10 @@ class PagedServingEngine:
     ) -> list[GenResult]:
         """Serve ``requests`` to completion under continuous batching and
         return their results in finish order."""
+        # per-session warn lifecycle: a fused fallback must be reported once
+        # per SESSION, not once per process — a monitoring loop that spins up
+        # a second engine would otherwise never see its regression
+        sfu.reset_fused_fallback_warnings()
         for r in requests:
             self.sched.submit(r)
         n_before = len(self.sched.results())

@@ -48,6 +48,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.distributed import shard_fused as shf
+from repro.distributed.sharding import active_mesh_rules
 from repro.kernels._backend import should_interpret
 
 # page 0 is the sentinel: never allocated, target of every unallocated
@@ -126,7 +128,32 @@ def write_prompt_pages(k_pages, v_pages, k_new, v_new, page_table, *,
     written whole (prefill always starts at position 0 of a fresh request),
     so the kernel never reads the pool.  Returns the updated (aliased)
     pools.
+
+    Under a multi-device mesh the write kernel runs per-shard: pools shard
+    over KV heads (the "cache_kv" axis), batch stays replicated so every
+    data rank applies ALL requests' writes — pool replicas over the data
+    axes never diverge.
     """
+    rules = active_mesh_rules()
+    if rules is not None:
+        hk = shf.dim_entry(rules, "cache_kv", k_pages.shape[0])
+        pool = shf.P(hk, None, None, None)
+        new = shf.P(None, None, hk, None)
+
+        def body(kp, vp, kn, vn, pt):
+            return _write_prompt_pages(kp, vp, kn, vn, pt,
+                                       interpret=interpret)
+
+        return shf.run_sharded(
+            rules, body, (k_pages, v_pages, k_new, v_new, page_table),
+            (pool, pool, new, new, shf.P(None, None)), (pool, pool),
+        )
+    return _write_prompt_pages(k_pages, v_pages, k_new, v_new, page_table,
+                               interpret=interpret)
+
+
+def _write_prompt_pages(k_pages, v_pages, k_new, v_new, page_table, *,
+                        interpret: bool | None = None):
     if interpret is None:
         interpret = should_interpret()
     Hkv, P, ps, dh = k_pages.shape
@@ -187,7 +214,32 @@ def append_kv(k_pages, v_pages, k_new, v_new, page_table, kv_len, *,
     the new token lands at logical position ``kv_len[b]``, i.e. page
     ``page_table[b, kv_len // ps]`` slot ``kv_len % ps``.  Inactive slots
     (all-zero table rows) write harmlessly into the sentinel page.
+
+    Under a multi-device mesh the append runs per-shard with the same
+    layout as :func:`write_prompt_pages`: pools over KV heads, batch
+    replicated (every data rank appends all requests' tokens, keeping pool
+    replicas identical).
     """
+    rules = active_mesh_rules()
+    if rules is not None:
+        hk = shf.dim_entry(rules, "cache_kv", k_pages.shape[0])
+        pool = shf.P(hk, None, None, None)
+        new = shf.P(None, None, hk, None)
+
+        def body(kp, vp, kn, vn, pt, kl):
+            return _append_kv(kp, vp, kn, vn, pt, kl, interpret=interpret)
+
+        return shf.run_sharded(
+            rules, body, (k_pages, v_pages, k_new, v_new, page_table, kv_len),
+            (pool, pool, new, new, shf.P(None, None), shf.P(None)),
+            (pool, pool),
+        )
+    return _append_kv(k_pages, v_pages, k_new, v_new, page_table, kv_len,
+                      interpret=interpret)
+
+
+def _append_kv(k_pages, v_pages, k_new, v_new, page_table, kv_len, *,
+               interpret: bool | None = None):
     if interpret is None:
         interpret = should_interpret()
     Hkv, P, ps, dh = k_pages.shape

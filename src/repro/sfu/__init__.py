@@ -51,7 +51,6 @@ from .plan import (
     compile_plan,
     dump_plan,
     load_plan,
-    mesh_blocks_fused,
     model_sites,
     plan_for,
     plan_missing_sites,
@@ -99,5 +98,4 @@ __all__ = [
     "FUSED_SITES",
     "warn_fused_fallback",
     "reset_fused_fallback_warnings",
-    "mesh_blocks_fused",
 ]

@@ -24,10 +24,16 @@ Every site except ``ssm`` has a fused producer kernel (``kernels/fused/``),
 so ``impl="fused"`` is executable plan intent for all of them; the
 ``attn.softmax:`` site additionally picks between two fused executors by
 shape (dense softmax kernel vs flash-attention kernel — see
-``models/layers._attn_softmax_dispatch``).  A site that cannot actually run
-fused at dispatch time — a multi-device mesh, or no producer kernel at all
-(``ssm``) — falls back to the unfused jnp PWL evaluation and reports it
-through :func:`warn_fused_fallback` — once per site, not per call.
+``models/layers._attn_softmax_dispatch``).  Fused dispatch is legal under a
+multi-device mesh: dispatch points consult
+``repro.distributed.sharding.active_mesh_rules`` and run the kernel
+per-shard inside ``shard_map`` (specs derived from the logical-axis rules —
+see ``repro.distributed.shard_fused`` and docs/distributed.md).  A site that
+genuinely cannot run fused at dispatch time — no producer kernel at all
+(``ssm``), or a sharding layout the per-shard kernels don't support (a KV
+cache sharded over the sequence axis) — falls back to the unfused jnp PWL
+evaluation and reports it through :func:`warn_fused_fallback` — once per
+site, not per call.
 
 Config translation (:func:`compile_plan`): ``act_impl`` /
 ``act_breakpoints`` / ``act_table_dtype`` are construction-time sugar
@@ -98,27 +104,6 @@ def warn_fused_fallback(key: str, reason: str) -> None:
 def reset_fused_fallback_warnings() -> None:
     """Clear the warn-once state (tests)."""
     _FALLBACK_WARNED.clear()
-
-
-def mesh_blocks_fused(key: str) -> bool:
-    """True when an active multi-device mesh prevents fused (Pallas)
-    dispatch for `key` — GSPMD cannot partition a ``pallas_call``, and the
-    unfused path's sharding constraints are worth more than the fusion.
-    The ONE predicate every fused dispatch point consults (MLP, MoE expert,
-    softmax), so the condition and its warn-once message cannot diverge
-    between sites; per-shard fused dispatch via shard_map is the ROADMAP
-    item that will retire it."""
-    from repro.distributed.sharding import _ACTIVE
-
-    rules = _ACTIVE.get()
-    if rules is not None and rules.mesh is not None and rules.mesh.size > 1:
-        warn_fused_fallback(
-            key, "multi-device mesh is active (GSPMD cannot partition a "
-            "pallas_call; per-shard fused dispatch via shard_map is a "
-            "ROADMAP item)"
-        )
-        return True
-    return False
 
 
 @dataclasses.dataclass(frozen=True)

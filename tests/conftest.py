@@ -1,0 +1,29 @@
+"""Suite-wide pytest config.
+
+``REPRO_HOST_DEVICES=N`` forces the CPU backend to expose N fake host
+devices (``--xla_force_host_platform_device_count``), so 2x2 / 1x4 meshes
+exist without TPUs.  The flag must land in the environment before jax
+initializes its backend, which is why it is applied at conftest *import*
+time — before any test module (and therefore jax) is imported.  The CI
+``mesh-smoke`` job sets it and selects ``-m mesh``; the default tier-1 run
+leaves it unset and the suite sees one device (multi-device coverage then
+comes from the ``tests/mesh_utils.run_py`` subprocess helper, which sets
+the flag per-child).
+"""
+import os
+
+_n = os.environ.get("REPRO_HOST_DEVICES")
+if _n:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{_flags} --xla_force_host_platform_device_count={int(_n)}"
+        ).strip()
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "mesh: exercises multi-device meshes (forced host devices; "
+        "selected by the CI mesh-smoke job via -m mesh)",
+    )

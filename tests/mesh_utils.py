@@ -1,0 +1,33 @@
+"""Shared helpers for multi-device tests on a single host.
+
+Real meshes need >1 device; CI hosts have one CPU.  Two mechanisms:
+
+* ``run_py(code, devices=N)`` — run a snippet in a fresh subprocess with
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set *before* jax
+  imports, so the parent process (and the rest of the suite) keeps seeing
+  one device.  This is the default: the flag only takes effect before the
+  backend initializes, which in a long-lived pytest process has already
+  happened.
+
+* the ``REPRO_HOST_DEVICES`` env hook in ``conftest.py`` — forces the
+  *whole* pytest process onto N fake host devices, for running the
+  ``mesh``-marked tests in-process (the CI ``mesh-smoke`` job).
+"""
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+REPO = pathlib.Path(__file__).parent.parent
+
+
+def run_py(code: str, devices: int = 8) -> subprocess.CompletedProcess:
+    """Run ``code`` under N forced host devices; returns CompletedProcess."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(REPO / "src")
+    return subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=900, env=env,
+    )

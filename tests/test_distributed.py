@@ -1,25 +1,11 @@
 """Distributed tests that need >1 device: run in subprocesses with
 XLA_FLAGS=--xla_force_host_platform_device_count=8 (NOT set globally — the
-rest of the suite must see 1 device)."""
-import os
-import pathlib
-import subprocess
-import sys
-import textwrap
-
+rest of the suite must see 1 device; see tests/mesh_utils.py)."""
 import pytest
 
-REPO = pathlib.Path(__file__).parent.parent
+from mesh_utils import run_py
 
-
-def run_py(code: str, devices: int = 8) -> subprocess.CompletedProcess:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = str(REPO / "src")
-    return subprocess.run(
-        [sys.executable, "-c", textwrap.dedent(code)],
-        capture_output=True, text=True, timeout=900, env=env,
-    )
+pytestmark = pytest.mark.mesh
 
 
 def test_compressed_grad_sync_matches_exact_psum():

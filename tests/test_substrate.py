@@ -146,7 +146,7 @@ class TestTrainResume:
 
         args = [
             "--arch", "repro-100m", "--reduced", "--batch", "2", "--seq", "64",
-            "--act-impl", "exact", "--ckpt-every", "4", "--log-every", "100",
+            "--ckpt-every", "4", "--log-every", "100",
         ]
         rc = train(args + ["--steps", "6", "--ckpt-dir", str(tmp_path / "a")])
         assert rc in (0, 2)
