@@ -1,0 +1,74 @@
+"""Autotune benchmark: the search's headline claim, machine-readable.
+
+Runs the full `repro.sfu.autotune` search on repro-100m (reduced on CPU)
+and records, per site, the baseline (uniform fused/32bp/f32) latency vs
+the autotuned winner's — plus the end-to-end Table-3-style gate and the
+cache hit rate — to ``BENCH_autotune.json``.  The acceptance claim this
+file tracks across PRs: the autotuned plan's summed site latency strictly
+improves on the default plan's at an equal-or-better MSE budget.
+
+    PYTHONPATH=src python benchmarks/bench_autotune.py [--quick] [--out PATH]
+
+Note: on a non-TPU backend the fused kernels run in Pallas interpret mode
+— latencies are a functional-ordering signal only (provenance labels
+this), which on CPU typically steers the winner to jnp/exact arms.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import tempfile
+
+import jax
+
+import repro  # noqa: F401
+from repro.sfu.autotune import AutotuneConfig, autotune
+
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_autotune.json"
+
+try:  # package-style (python -m benchmarks.run) or script-style invocation
+    from .common import emit, write_bench_json
+except ImportError:
+    from common import emit, write_bench_json
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="restricted sweep + smaller workloads (CI smoke)")
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    ap.add_argument("--cache-dir", default=None,
+                    help="MeasurementCache dir (default: a fresh tempdir, "
+                    "so the benchmark always measures)")
+    args = ap.parse_args(argv)
+    if jax.default_backend() == "cpu" and not args.quick:
+        print("# cpu backend: forcing --quick sweep (interpret mode)")
+        args.quick = True
+
+    cache_dir = args.cache_dir or tempfile.mkdtemp(prefix="autotune_bench_")
+    res = autotune(AutotuneConfig(
+        arch="repro-100m", reduced=args.quick, quick=args.quick,
+        cache_dir=cache_dir,
+    ))
+    rpt = res.report
+
+    print("site,chosen,us,baseline_us,mse,budget_mse")
+    which = "accuracy_first" if rpt["accuracy_fallback"] else "chosen"
+    for e in rpt["sites"]:
+        c = e[which]
+        s = c["spec"]
+        tag = f"{s['impl']}/{s['n_segments'] - 1}bp/{s['dtype']}"
+        emit(f"{e['site']}:{tag}", c["us"],
+             f"baseline={e['baseline']['us']:.2f}us mse={c['mse']:.3e}")
+    t = rpt["totals"]
+    emit("total_chosen", t["chosen_us"], f"speedup={t['speedup']:.2f}x")
+    emit("total_baseline", t["baseline_us"], "")
+
+    write_bench_json(args.out, {
+        "benchmark": "autotune",
+        **{k: v for k, v in rpt.items() if k != "benchmark"},
+    })
+
+
+if __name__ == "__main__":
+    main()

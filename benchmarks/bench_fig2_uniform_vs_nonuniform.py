@@ -1,14 +1,32 @@
 """Paper Fig. 2: uniform vs non-uniform PWL of GELU, 5 breakpoints, [-2, 2].
-The paper reports ~7x MSE improvement; we also sweep other functions."""
+The paper reports ~7x MSE improvement; we also sweep other functions.
+
+Prints the CSV and writes the rows (with provenance) to
+``BENCH_fig2_uniform_vs_nonuniform.json``."""
 from __future__ import annotations
+
+import argparse
+import pathlib
 
 import repro  # noqa: F401
 from repro.core import fit, functions as F, pwl
 
+try:  # package-style (python -m benchmarks.run) or script-style invocation
+    from .common import provenance, write_bench_json
+except ImportError:
+    from common import provenance, write_bench_json
 
-def main() -> None:
+DEFAULT_OUT = (pathlib.Path(__file__).resolve().parent.parent
+               / "BENCH_fig2_uniform_vs_nonuniform.json")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    args = ap.parse_args(argv)
     print("function,range,n_bp,uniform_mse,nonuniform_mse,improvement")
     cfg = fit.FitConfig(max_steps=1500, max_rounds=3)
+    rows = []
     for name, lo, hi, n in [
         ("gelu", -2, 2, 5),      # the paper's exact Fig. 2 cell
         ("gelu", -8, 8, 16),
@@ -24,6 +42,14 @@ def main() -> None:
             f"{name},[{lo};{hi}],{n},{mse_u:.3e},{r.mse:.3e},{mse_u/r.mse:.1f}x",
             flush=True,
         )
+        rows.append({"function": name, "range": [lo, hi], "n_bp": n,
+                     "uniform_mse": float(mse_u), "nonuniform_mse": float(r.mse),
+                     "improvement": float(mse_u / r.mse)})
+    write_bench_json(args.out, {
+        "benchmark": "fig2_uniform_vs_nonuniform",
+        **provenance(),
+        "rows": rows,
+    })
 
 
 if __name__ == "__main__":

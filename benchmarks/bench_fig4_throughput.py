@@ -4,18 +4,30 @@ On real TPU the kernel saturates the VPU; on this CPU harness wall-times are
 indicative only, so we also report the STRUCTURAL numbers that transfer:
 vector ops per element per config (decode+fetch+MADD) and the compiled
 FLOP/transcendental counts of exact vs PWL GELU at equal shapes (the paper's
-"complex activation at ReLU cost" claim, in compiled-op form)."""
+"complex activation at ReLU cost" claim, in compiled-op form).
+
+Prints the CSV and writes the rows (with provenance — latency numbers on a
+non-TPU backend are interpret-mode, labeled as such) to
+``BENCH_fig4_throughput.json``."""
 from __future__ import annotations
 
+import argparse
+import pathlib
+
 import jax
-import jax.numpy as jnp
 
 import repro  # noqa: F401
 from repro.core import functions as F, pwl
 from repro.sfu import get_store
 from repro.kernels import ops, ref
 
-from .common import emit, time_fn
+try:  # package-style (python -m benchmarks.run) or script-style invocation
+    from .common import emit, provenance, time_fn, write_bench_json
+except ImportError:
+    from common import emit, provenance, time_fn, write_bench_json
+
+DEFAULT_OUT = (pathlib.Path(__file__).resolve().parent.parent
+               / "BENCH_fig4_throughput.json")
 
 SIZES = [2**i for i in range(8, 21, 2)]
 DEPTHS = [8, 16, 32, 64]
@@ -23,12 +35,18 @@ DEPTHS = [8, 16, 32, 64]
 
 def compiled_costs(fn, x):
     c = jax.jit(fn).lower(x).compile().cost_analysis() or {}
+    if isinstance(c, (list, tuple)):  # older jax: one entry per device
+        c = c[0] if c else {}
     return c.get("flops", 0.0), c.get("transcendentals", 0.0)
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     spec = F.get("gelu")
+    rows = []
     for depth in DEPTHS:
         table = pwl.make_uniform_table(spec, depth)
         for n in SIZES:
@@ -36,8 +54,12 @@ def main() -> None:
             us = time_fn(lambda a: ops.pwl_activation(a, table), x, iters=5)
             gact = n / us / 1e3  # GAct/s
             emit(f"pwl_kernel_d{depth}_n{n}", us, f"{gact:.3f} GAct/s")
+            rows.append({"name": f"pwl_kernel_d{depth}_n{n}", "us": us,
+                         "gact_per_s": gact})
         # structural: ops/element = n compares + 2n FMA (delta) + 1 MADD
         emit(f"pwl_structural_d{depth}", 0.0, f"{3*depth+2} vec-ops/elt")
+        rows.append({"name": f"pwl_structural_d{depth}",
+                     "vec_ops_per_elt": 3 * depth + 2})
 
     # compiled-op comparison at a fixed shape: exact vs PWL (jnp path)
     x = jax.random.normal(jax.random.PRNGKey(0), (4096, 1024))
@@ -51,6 +73,17 @@ def main() -> None:
     us_p = time_fn(lambda a: ops.pwl_activation(a, table), x, iters=5)
     emit("gelu_exact_wall", us_e, "")
     emit("gelu_pwl32_kernel_wall", us_p, "interpret-mode CPU; TPU perf via roofline")
+    rows += [
+        {"name": "gelu_exact_compiled", "flops": f_exact, "transcendentals": t_exact},
+        {"name": "gelu_pwl32_compiled", "flops": f_pwl, "transcendentals": t_pwl},
+        {"name": "gelu_exact_wall", "us": us_e},
+        {"name": "gelu_pwl32_kernel_wall", "us": us_p},
+    ]
+    write_bench_json(args.out, {
+        "benchmark": "fig4_throughput",
+        **provenance(),
+        "rows": rows,
+    })
 
 
 if __name__ == "__main__":

@@ -1,27 +1,46 @@
 """Paper Fig. 5: MSE and MAE of each activation for 4..64 breakpoints, plus
 the scaling factors per doubling (paper: 15.9x MSE, 3.8x MAE average) and the
-fp16-ULP claim (>16 BP -> MSE < 1 ULP @ base 1)."""
+fp16-ULP claim (>16 BP -> MSE < 1 ULP @ base 1).
+
+Prints the CSV and writes the rows (with provenance) to
+``BENCH_fig5_error_sweep.json``."""
 from __future__ import annotations
+
+import argparse
+import pathlib
 
 import numpy as np
 
 import repro  # noqa: F401
-from repro.core import fit, functions as F, pwl
+from repro.core import fit
+
+try:  # package-style (python -m benchmarks.run) or script-style invocation
+    from .common import provenance, write_bench_json
+except ImportError:
+    from common import provenance, write_bench_json
+
+DEFAULT_OUT = (pathlib.Path(__file__).resolve().parent.parent
+               / "BENCH_fig5_error_sweep.json")
 
 FUNCTIONS = ["exp", "gelu", "silu", "tanh", "sigmoid", "softplus"]
 BPS = [4, 8, 16, 32, 64]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    args = ap.parse_args(argv)
     print("function,n_bp,mse,mae")
     mse_ratios, mae_ratios = [], []
     cfg = fit.FitConfig(max_steps=2500, max_rounds=4, init="curvature")
+    rows = []
     for name in FUNCTIONS:
-        spec = F.get(name)
         prev = None
         for n in BPS:
             r = fit.fit(name, n, cfg=cfg)
             print(f"{name},{n},{r.mse:.3e},{r.mae:.3e}", flush=True)
+            rows.append({"function": name, "n_bp": n,
+                         "mse": float(r.mse), "mae": float(r.mae)})
             if prev is not None:
                 mse_ratios.append(prev[0] / max(r.mse, 1e-12))
                 mae_ratios.append(prev[1] / max(r.mae, 1e-12))
@@ -31,6 +50,14 @@ def main() -> None:
     print(f"# MAE improvement per doubling (geomean): {g(mae_ratios):.1f}x (paper: 3.8x)")
     ulp = 2.0 ** -10
     print(f"# fp16 ULP@1 = {ulp:.2e}; all 32-bp MSEs below: see rows above")
+    write_bench_json(args.out, {
+        "benchmark": "fig5_error_sweep",
+        **provenance(),
+        "rows": rows,
+        "mse_per_doubling_geomean": g(mse_ratios),
+        "mae_per_doubling_geomean": g(mae_ratios),
+        "fp16_ulp_at_1": ulp,
+    })
 
 
 if __name__ == "__main__":

@@ -1,4 +1,4 @@
-"""Fused-vs-unfused MLP latency: exact / pwl / pwl_kernel / pwl_fused.
+"""Fused-vs-unfused MLP latency: exact / jnp / kernel / fused.
 
 The end-to-end claim behind the fused subsystem (ISSUE 1, mirroring the
 paper's Sec. V speedups): evaluating the PWL activation as an epilogue of
@@ -43,14 +43,14 @@ def make_mlp(mode: str, table):
         from repro.core import functions as F
 
         act = F.get(table.name).fn
-    elif mode == "pwl":
+    elif mode == "jnp":
         def act(x):
             return pwl.eval_coeff(x, table)
-    elif mode == "pwl_kernel":
+    elif mode == "kernel":
         def act(x):
             return ops.pwl_activation(x, table)
 
-    if mode == "pwl_fused":
+    if mode == "fused":
         @jax.jit
         def mlp(x, wg, wu, wd):
             return fused.fused_glu(x, wg, wu, table=table) @ wd
@@ -100,7 +100,7 @@ def main(argv=None):
     base = None
     y_exact = None
     results = {}
-    for mode in ("exact", "pwl", "pwl_kernel", "pwl_fused"):
+    for mode in ("exact", "jnp", "kernel", "fused"):
         fn = make_mlp(mode, table)
         us = time_fn(fn, x, wg, wu, wd,
                      warmup=1 if args.quick else 2, iters=iters)

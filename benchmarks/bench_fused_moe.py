@@ -1,4 +1,4 @@
-"""Fused-vs-unfused MoE expert FFN latency: exact / pwl / pwl_fused.
+"""Fused-vs-unfused MoE expert FFN latency: exact / jnp / fused.
 
 The MoE sibling of ``bench_fused_mlp.py`` (ISSUE 4): after token dispatch,
 every expert applies its own GLU to a (capacity, d_model) bucket —
@@ -6,7 +6,7 @@ every expert applies its own GLU to a (capacity, d_model) bucket —
     h = act(buf @ Wg[e]) * (buf @ Wu[e]);   y = h @ Wd[e]
 
 Unfused, the two (E, C, F) pre-activations and the activation output each
-round-trip HBM; ``pwl_fused`` evaluates the non-uniform PWL decode as an
+round-trip HBM; ``fused`` evaluates the non-uniform PWL decode as an
 epilogue of the per-expert gemms (kernels/fused/moe.py) so the activation
 and gating cost zero extra traffic.  Emits CSV rows via benchmarks/common.py
 AND a machine-readable ``BENCH_fused_moe.json`` (per-mode latency + output
@@ -43,11 +43,11 @@ def make_expert_ffn(mode: str, table):
         from repro.core import functions as F
 
         act = F.get(table.name).fn
-    elif mode == "pwl":
+    elif mode == "jnp":
         def act(x):
             return pwl.eval_coeff(x, table)
 
-    if mode == "pwl_fused":
+    if mode == "fused":
         @jax.jit
         def ffn(x, wg, wu, wd):
             h = fused.fused_moe_glu(x, wg, wu, table=table)
@@ -99,7 +99,7 @@ def main(argv=None):
     base = None
     y_exact = None
     results = {}
-    for mode in ("exact", "pwl", "pwl_fused"):
+    for mode in ("exact", "jnp", "fused"):
         fn = make_expert_ffn(mode, table)
         us = time_fn(fn, x, wg, wu, wd,
                      warmup=1 if args.quick else 2, iters=iters)

@@ -193,7 +193,7 @@ def main(argv=None):
     from repro.models import Model
     from repro.serving import GenRequest, PagedServingEngine
 
-    cfg = get_reduced_config("repro-100m", act_impl="pwl_fused")
+    cfg = get_reduced_config("repro-100m", act_impl="fused")
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)

@@ -3,15 +3,25 @@
 Each row fits the paper's (function, range, #breakpoints) cell and compares
 our sq-AAE (the metric of the "This work" column — see EXPERIMENTS.md) against
 the published reference and paper values.
+
+Prints the CSV and writes the rows (with provenance) to
+``BENCH_table2_sota.json``.
 """
 from __future__ import annotations
 
-import time
+import argparse
+import pathlib
 
 import repro  # noqa: F401
-from repro.core import fit, functions as F, pwl
+from repro.core import fit, functions as F
 
-from .common import emit, sq_aae
+try:  # package-style (python -m benchmarks.run) or script-style invocation
+    from .common import provenance, sq_aae, write_bench_json
+except ImportError:
+    from common import provenance, sq_aae, write_bench_json
+
+DEFAULT_OUT = (pathlib.Path(__file__).resolve().parent.parent
+               / "BENCH_table2_sota.json")
 
 # (ref, function, lo, hi, n_bp, ref_err, paper_this_work)
 ROWS = [
@@ -28,12 +38,15 @@ ROWS = [
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    args = ap.parse_args(argv)
     print("ref,function,range,n_bp,ref_err,paper,ours_sq_aae,ours_mse,impr_vs_ref")
     cfg = fit.FitConfig(max_steps=3000, max_rounds=6, init="curvature")
+    rows = []
     for ref, name, lo, hi, n_bp, ref_err, paper_val in ROWS:
         spec = F.get(name)
-        t0 = time.time()
         r = fit.fit(name, n_bp, float(lo), float(hi), cfg)
         ours = sq_aae(r.table, spec, lo, hi)
         print(
@@ -41,6 +54,15 @@ def main() -> None:
             f"{ours:.3e},{r.mse:.3e},{ref_err/ours:.1f}x",
             flush=True,
         )
+        rows.append({"ref": ref, "function": name, "range": [lo, hi],
+                     "n_bp": n_bp, "ref_err": ref_err, "paper": paper_val,
+                     "ours_sq_aae": float(ours), "ours_mse": float(r.mse),
+                     "impr_vs_ref": float(ref_err / ours)})
+    write_bench_json(args.out, {
+        "benchmark": "table2_sota",
+        **provenance(),
+        "rows": rows,
+    })
 
 
 if __name__ == "__main__":

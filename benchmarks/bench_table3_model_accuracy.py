@@ -6,50 +6,48 @@ The paper measures ImageNet top-1 drop over 600 TIMM models; our zoo is the
 report the distribution-level equivalents on REDUCED configs:
   * max |logit delta| and KL(exact || pwl) per arch x breakpoints,
   * greedy-decode agreement rate (top-1 match — closest analogue of top-1).
+
+Prints the CSV and writes the rows (with provenance) to
+``BENCH_table3_model_accuracy.json``.  The per-(arch, plan) comparison
+itself lives in ``repro.sfu.autotune.measure.e2e_logit_check`` — the same
+gate the autotuner applies to candidate plans.
 """
 from __future__ import annotations
 
-import dataclasses
+import argparse
+import pathlib
 
-import jax
 import jax.numpy as jnp
 
 import repro  # noqa: F401
 from repro.configs import ARCH_IDS, get_reduced_config
-from repro.models import Model
+from repro.sfu.autotune.measure import e2e_logit_check
+
+try:  # package-style (python -m benchmarks.run) or script-style invocation
+    from .common import provenance, write_bench_json
+except ImportError:
+    from common import provenance, write_bench_json
+
+DEFAULT_OUT = (pathlib.Path(__file__).resolve().parent.parent
+               / "BENCH_table3_model_accuracy.json")
 
 BPS = [8, 16, 32]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    args = ap.parse_args(argv)
     print("arch,n_bp,max_logit_delta,mean_kl,top1_agree")
+    rows = []
     for arch in ARCH_IDS:
-        cfg_e = get_reduced_config(arch, act_impl="exact", dtype=jnp.float32)
-        model_e = Model(cfg_e)
-        params = model_e.init(jax.random.PRNGKey(0))
-        B, S = 4, 32
-        batch = {
-            "tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg_e.vocab_size)
-        }
-        if cfg_e.is_encoder_decoder:
-            batch["frames"] = jax.random.normal(
-                jax.random.PRNGKey(2), (B, cfg_e.encoder_seq, cfg_e.d_model), cfg_e.dtype
-            )
-        if cfg_e.n_vision_tokens:
-            batch["vision_embeds"] = jax.random.normal(
-                jax.random.PRNGKey(2), (B, cfg_e.n_vision_tokens, cfg_e.d_model), cfg_e.dtype
-            )
-        le, _ = model_e.forward(params, batch)
-        pe = jax.nn.softmax(le, -1)
-
         def report(tag, cfg_p):
-            lp, _ = Model(cfg_p).forward(params, batch)
-            delta = float(jnp.max(jnp.abs(le - lp)))
-            logq = jax.nn.log_softmax(lp, -1)
-            logp = jax.nn.log_softmax(le, -1)
-            kl = float(jnp.mean(jnp.sum(pe * (logp - logq), -1)))
-            agree = float(jnp.mean(jnp.argmax(le, -1) == jnp.argmax(lp, -1)))
-            print(f"{arch},{tag},{delta:.4f},{kl:.3e},{agree:.4f}", flush=True)
+            from repro import sfu
+
+            m = e2e_logit_check(cfg_p, sfu.plan_for(cfg_p))
+            print(f"{arch},{tag},{m['max_logit_delta']:.4f},"
+                  f"{m['mean_kl']:.3e},{m['top1_agree']:.4f}", flush=True)
+            rows.append({"arch": arch, "tag": tag, **m})
 
         for n_bp in BPS:
             # paper-faithful: EVERY activation swapped — clear the shipped
@@ -57,20 +55,26 @@ def main() -> None:
             report(
                 f"{n_bp}",
                 get_reduced_config(
-                    arch, act_impl="pwl", act_breakpoints=n_bp,
+                    arch, act_impl="jnp", act_breakpoints=n_bp,
                     dtype=jnp.float32, act_site_specs=(),
                 ),
             )
-        if cfg_e.family in ("ssm", "hybrid"):
+        family = get_reduced_config(arch).family
+        if family in ("ssm", "hybrid"):
             # mitigation: SSM-input SiLU exact — the production default pin
             # the shipped configs carry in act_site_specs
             report(
                 "32+ssm-exempt",
                 get_reduced_config(
-                    arch, act_impl="pwl", act_breakpoints=32,
+                    arch, act_impl="jnp", act_breakpoints=32,
                     dtype=jnp.float32,
                 ),
             )
+    write_bench_json(args.out, {
+        "benchmark": "table3_model_accuracy",
+        **provenance(),
+        "rows": rows,
+    })
 
 
 if __name__ == "__main__":

@@ -1,42 +1,20 @@
-"""Shared benchmark utilities: timing, CSV emission, JSON provenance."""
+"""Shared benchmark utilities: timing, CSV emission, JSON provenance.
+
+``provenance`` and ``time_fn`` are re-exported from
+``repro.sfu.autotune.measure`` — the canonical definitions — so the
+BENCH_*.json provenance block and the autotuner's measurement cache can
+never disagree about what "latency" or "interpret mode" mean.
+"""
 from __future__ import annotations
 
 import json
 import pathlib
-import time
 
-import jax
 import jax.numpy as jnp
 
+from repro.sfu.autotune.measure import provenance, time_fn  # noqa: F401
 
-def provenance(quick: bool = False, mesh=None) -> dict:
-    """The provenance block every ``BENCH_*.json`` embeds at top level.
-
-    ``backend``/``interpret_mode`` are the load-bearing fields: on any
-    non-TPU backend the Pallas kernels run in interpret mode, so latency
-    numbers are validation-only and must never be read as TPU latencies
-    (ROADMAP flags this).  ``device``/``jax_version`` pin the machine, and
-    ``quick`` marks CI-smoke shapes.  ``device_count``/``mesh`` pin the
-    topology: per-shard fused dispatch means a number measured on a 2x2
-    mesh is not comparable to a single-device run of the same shape.
-    Pass ``mesh`` explicitly, or it is read from the active sharding rules.
-    """
-    backend = jax.default_backend()
-    if mesh is None:
-        from repro.distributed.sharding import active_rules
-
-        rules = active_rules()
-        mesh = rules.mesh if rules is not None else None
-    return {
-        "backend": backend,
-        "interpret_mode": backend != "tpu",
-        "device": jax.devices()[0].device_kind,
-        "device_count": jax.device_count(),
-        "mesh": dict(mesh.shape) if mesh is not None else None,
-        "jax_version": jax.__version__,
-        "unix_time": int(time.time()),
-        "quick": bool(quick),
-    }
+__all__ = ["provenance", "time_fn", "write_bench_json", "emit", "sq_aae"]
 
 
 def write_bench_json(path, payload: dict) -> pathlib.Path:
@@ -50,21 +28,6 @@ def write_bench_json(path, payload: dict) -> pathlib.Path:
     out.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"# results -> {out}")
     return out
-
-
-def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
-    """Median wall-time (us) of a jitted callable."""
-    for _ in range(warmup):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2] * 1e6
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):

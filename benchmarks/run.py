@@ -26,6 +26,7 @@ BENCHMARKS = [
     ("fused_attention", "benchmarks.bench_fused_attention"),
     ("roofline", "benchmarks.bench_roofline"),
     ("serving", "benchmarks.bench_serving"),
+    ("autotune", "benchmarks.bench_autotune"),
 ]
 
 

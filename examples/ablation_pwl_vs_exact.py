@@ -43,7 +43,7 @@ def main():
     ap.add_argument("--steps", type=int, default=60)
     args = ap.parse_args()
     exact = run("exact", args.steps)
-    approx = run("pwl", args.steps)
+    approx = run("jnp", args.steps)
     print(f"{'step':>6} {'exact':>9} {'pwl':>9} {'delta':>9}")
     for i in range(0, args.steps, max(args.steps // 10, 1)):
         print(f"{i:>6} {exact[i]:>9.4f} {approx[i]:>9.4f} {approx[i]-exact[i]:>+9.4f}")

@@ -85,7 +85,7 @@ def main(argv=None):
                      "repro-100m --dump-plan)")
         print(f"loaded plan {plan.fingerprint} from {args.plan}:")
     else:
-        cfg100m = dataclasses.replace(reduced(), act_impl="pwl_fused")
+        cfg100m = dataclasses.replace(reduced(), act_impl="fused")
         plan = sfu.compile_plan(cfg100m)
         print(f"compiled plan {plan.fingerprint}:")
     for key, s in plan.items():
@@ -109,20 +109,20 @@ def main(argv=None):
         fused_cfg = (
             dataclasses.replace(reduced(), act_plan=plan, dtype=jnp.float32)
             if args.plan
-            else dataclasses.replace(reduced(), act_impl="pwl_fused",
+            else dataclasses.replace(reduced(), act_impl="fused",
                                      dtype=jnp.float32)
         )
         logits = {}
         for tag, cfg in (
-            ("pwl", dataclasses.replace(reduced(), act_impl="pwl",
+            ("jnp", dataclasses.replace(reduced(), act_impl="jnp",
                                         dtype=jnp.float32)),
-            ("pwl_fused", fused_cfg),
+            ("fused", fused_cfg),
         ):
             model = Model(cfg)
             params = model.init(jax.random.PRNGKey(0))
             logits[tag], _ = model.forward(params, batch)
-        err = float(jnp.max(jnp.abs(logits["pwl_fused"] - logits["pwl"])))
-        print(f"model logits max |pwl_fused - pwl| (repro-100m reduced): {err:.2e}")
+        err = float(jnp.max(jnp.abs(logits["fused"] - logits["jnp"])))
+        print(f"model logits max |fused - jnp| (repro-100m reduced): {err:.2e}")
 
 
 if __name__ == "__main__":

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 from repro import sfu
 from repro.configs import get_reduced_config
 
-cfg = get_reduced_config("olmoe-1b-7b", act_impl="pwl_fused", pwl_softmax=True)
+cfg = get_reduced_config("olmoe-1b-7b", act_impl="fused", pwl_softmax=True)
 plan = sfu.compile_plan(cfg)                 # one ApproxSpec per activation site
 print(plan.dumps())                          # JSON a serving job can reload
 assert plan.spec("moe.expert:silu").impl == "fused"   # expert-FFN GLU epilogue

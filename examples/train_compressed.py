@@ -28,7 +28,7 @@ def main(argv=None):
     ap.add_argument("--compress", action="store_true", default=True)
     args = ap.parse_args(argv)
 
-    cfg = get_reduced_config("repro-100m", act_impl="pwl")
+    cfg = get_reduced_config("repro-100m", act_impl="jnp")
     model = Model(cfg)
     n_dev = len(jax.devices())
     mesh = jax.make_mesh((n_dev,), ("dp",))

@@ -1,11 +1,13 @@
 """End-to-end driver: train the ~100M-parameter GELU LM for a few hundred
 steps with PWL (Flex-SFU) activations, with checkpointing enabled.
 
-    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+    PYTHONPATH=src python examples/train_lm.py [--steps 200] [--plan plan.json]
 
 This is the paper's deployment story end to end: the exact same training run
-with `--act-impl exact` vs `--act-impl pwl` converges to matching losses
-(compare with examples/ablation_pwl_vs_exact.py).
+with an exact-activation plan vs a PWL plan converges to matching losses
+(compare with examples/ablation_pwl_vs_exact.py).  Plans come from
+``sfu.dump_plan`` / ``--dump-plan`` on any launcher, or from the autotuner
+(``python -m repro.launch.autotune``).
 """
 import argparse
 import sys
@@ -16,20 +18,21 @@ from repro.launch.train import train
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200)
-    ap.add_argument("--act-impl", default="pwl")
+    ap.add_argument("--plan", default=None,
+                    help="ActivationPlan JSON (default: the arch's own plan)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
     args = ap.parse_args()
-    return train(
-        [
-            "--arch", "repro-100m",
-            "--steps", str(args.steps),
-            "--batch", "8",
-            "--seq", "512",
-            "--act-impl", args.act_impl,
-            "--ckpt-dir", args.ckpt_dir,
-            "--ckpt-every", "50",
-        ]
-    )
+    argv = [
+        "--arch", "repro-100m",
+        "--steps", str(args.steps),
+        "--batch", "8",
+        "--seq", "512",
+        "--ckpt-dir", args.ckpt_dir,
+        "--ckpt-every", "50",
+    ]
+    if args.plan:
+        argv += ["--plan", args.plan]
+    return train(argv)
 
 
 if __name__ == "__main__":

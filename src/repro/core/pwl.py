@@ -38,19 +38,27 @@ class PWLTable:
       m:   (n+1,) per-segment slopes.
       q:   (n+1,) per-segment intercepts (y = m*x + q).
       name: target function name (metadata).
+      storage: table storage format this table was quantized to
+        ("f32" | "bf16" | "f16" | "int8").  For "int8" the arrays are f32
+        but hold de-quantized int8-grid values (exactly representable), so
+        the tag is the only record of the format — see
+        ``core.quantize.full_space_int8``.  Narrow-float formats are also
+        detectable from the array dtypes; the tag keeps all formats uniform.
     """
 
     bp: jax.Array
     m: jax.Array
     q: jax.Array
     name: str = "?"
+    storage: str = "f32"
 
     def tree_flatten(self):
-        return (self.bp, self.m, self.q), self.name
+        return (self.bp, self.m, self.q), (self.name, self.storage)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, name=aux)
+        name, storage = aux
+        return cls(*children, name=name, storage=storage)
 
     @property
     def n_breakpoints(self) -> int:

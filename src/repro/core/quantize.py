@@ -76,6 +76,43 @@ def quantize_table(table: PWLTable, bits: int, x_range: tuple[float, float]) -> 
     )
 
 
+def full_space_int8(table: PWLTable) -> PWLTable:
+    """FQA-style full-space int8 quantization of a PWL table (table *storage*
+    format ``"int8"``, the quantization-axis counterpart of bf16/f16).
+
+    Each coefficient array (bp, m, q) is quantized to int8 independently with
+    its own power-of-two scale spanning the array's full value range — "full
+    space": the scale covers max|v| with no outlier clipping, so every
+    breakpoint and coefficient lands on the int8 grid of its array.  The
+    arrays are then de-quantized back to f32: ``v_q * s`` is exactly
+    representable (|v_q| <= 127 needs 7 mantissa bits; a power-of-two scale
+    only shifts the exponent), so the returned table carries exactly the
+    int8 format error while every downstream evaluation path — jnp
+    ``eval_coeff``, the standalone kernel, the fused epilogues — keeps its
+    full-rate f32 decode arithmetic.  Same narrow-memories / wide-MADD
+    contract as the hardware's multi-format SRAMs, applied to an 8-bit
+    integer grid instead of a narrow float.
+
+    Unlike :func:`quantize_table` (which simulates the *integer datapath*:
+    quantized inputs, integer compares, 2b-bit accumulator), this is a table
+    *storage* format: inputs and arithmetic stay f32.  The returned table is
+    tagged ``storage="int8"`` so pack/plan layers record the format.
+    """
+    bits = 8
+    lo, hi = _INT_INFO[bits]
+
+    def q8(v):
+        v = np.asarray(v, np.float64)
+        s = _pow2_scale(float(np.abs(v).max()), bits)
+        vq = np.clip(np.round(v / s), lo, hi)
+        return (vq * s).astype(np.float32)
+
+    return PWLTable(
+        bp=q8(table.bp), m=q8(table.m), q=q8(table.q),
+        name=table.name, storage="int8",
+    )
+
+
 def eval_fixed_point(x, qt: QuantizedPWLTable):
     """Simulate the integer datapath: quantize input, int compare-count decode,
     2b-bit MADD accumulate, de-quantize output."""

@@ -1,4 +1,4 @@
 # Flex-SFU compute kernels (see README.md for the ASIC -> TPU mapping):
 #   pwl_act.py / ops.py / ref.py — standalone elementwise PWL kernels
 #   fused/                       — PWL activations as epilogues of matmul,
-#                                  GLU, and norm kernels (act_impl="pwl_fused")
+#                                  GLU, and norm kernels (act_impl="fused")

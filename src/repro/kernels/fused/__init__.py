@@ -24,7 +24,7 @@ kernel that produced the pre-activation.  This package provides:
 
 Models opt in through their activation plan: sites compiled with
 ``ApproxSpec(impl="fused")`` — e.g. via the legacy knob
-``ModelConfig.act_impl = "pwl_fused"`` — dispatch here from
+``ModelConfig.act_impl = "fused"`` — dispatch here from
 ``models/layers._fused_mlp_hidden`` (mlp), ``models/moe.moe_layer``
 (moe.expert), and the attention softmax dispatch in ``models/layers.py``
 (attn.softmax); sites that cannot run fused at dispatch time fall back to

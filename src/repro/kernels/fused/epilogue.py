@@ -78,9 +78,16 @@ def pwl_eval_tile(x, bp_ref, dmq_ref, n_bp: int):
 
 
 def table_dtype_name(table: PWLTable) -> str:
-    """Storage-format tag ("f32" | "bf16" | "f16") of a table's arrays."""
+    """Storage-format tag ("f32" | "bf16" | "f16" | "int8") of a table.
+
+    The explicit ``storage`` tag wins when set (it is the only record of the
+    int8 full-space-quantized grid, whose arrays are f32); tables built
+    without the tag fall back to array-dtype detection."""
     import numpy as np
 
+    storage = getattr(table, "storage", "f32")
+    if storage != "f32":
+        return storage
     return {
         np.dtype(jnp.bfloat16): "bf16",
         np.dtype(jnp.float16): "f16",
@@ -91,16 +98,22 @@ def pack_table(table: PWLTable, dtype: str | None = None,
                native: bool | None = None):
     """Pack (bp, m, q) into the operand layout the tile function consumes.
 
-    ``dtype`` ("f32" | "bf16" | "f16", default: the table's own storage
-    format) is the multi-format axis (paper Sec. III): coefficients are
-    quantized to that format.  For narrow formats the operands then ship
-    **natively** in that format by default (``native=None``): (n_bp, 1)
-    breakpoints plus (n_bp+1, 2) raw (m_i, q_i) rows, upcast in-register by
-    :func:`pwl_value_and_slope_tile` — the kernel reads narrow table
-    memories exactly like the ASIC, while the compares/FMAs stay full-rate
-    f32.  ``native=False`` forces the legacy quantize-then-upcast packing
-    (f32 delta operands precomputed at pack time); both layouts decode
-    bit-identically.  f32 tables always use the delta layout.
+    ``dtype`` ("f32" | "bf16" | "f16" | "int8", default: the table's own
+    storage format) is the multi-format axis (paper Sec. III): coefficients
+    are quantized to that format.  For narrow float formats the operands
+    then ship **natively** in that format by default (``native=None``):
+    (n_bp, 1) breakpoints plus (n_bp+1, 2) raw (m_i, q_i) rows, upcast
+    in-register by :func:`pwl_value_and_slope_tile` — the kernel reads
+    narrow table memories exactly like the ASIC, while the compares/FMAs
+    stay full-rate f32.  ``native=False`` forces the legacy
+    quantize-then-upcast packing (f32 delta operands precomputed at pack
+    time); both layouts decode bit-identically.  f32 tables always use the
+    delta layout.  ``"int8"`` (the FQA full-space-quantized grid) also uses
+    the f32 delta layout: the de-quantized int8-grid values — and their
+    pairwise deltas — are exactly representable in f32, so the decode is
+    bit-faithful to an 8-bit table memory read through a wide datapath; the
+    format is recorded on the :class:`EpiloguePlan` (``table_dtype``)
+    rather than in the operand dtype.
     """
     import numpy as np
 
@@ -110,8 +123,8 @@ def pack_table(table: PWLTable, dtype: str | None = None,
         table = quantize_table(table, dtype)
     storage = table_dtype_name(table)
     if native is None:
-        native = storage != "f32"
-    if native and storage != "f32":
+        native = storage in ("bf16", "f16")
+    if native and storage in ("bf16", "f16"):
         np_dtype = np.asarray(table.m).dtype
         bp = np.asarray(table.bp).reshape(-1, 1)
         mq = np.stack(
@@ -135,9 +148,10 @@ class EpiloguePlan:
     kind: "identity" | "exact:<fn-name>" | "pwl"
     n_bp: breakpoint count (pwl only; fixes the static unroll depth).
     table_dtype: storage format the table operands were quantized to
-        ("f32" | "bf16" | "f16") — recorded so the jit cache and run
-        manifests distinguish formats; the operands themselves arrive
-        already quantized (see :func:`pack_table`).
+        ("f32" | "bf16" | "f16" | "int8") — recorded so the jit cache and
+        run manifests distinguish formats; the operands themselves arrive
+        already quantized (see :func:`pack_table`; for "int8" they are f32
+        delta operands over de-quantized int8-grid values).
     """
 
     kind: str = "identity"

@@ -122,7 +122,7 @@ def _fused_linear_2d(x, w, b, tables, *, plan, block, interpret, has_bias):
 
 
 # --- autodiff: fused forward, pure-jnp recompute backward ------------------
-# pallas_call has no VJP; training through act_impl="pwl_fused" still has to
+# pallas_call has no VJP; training through act_impl="fused" still has to
 # work, so the backward rematerializes z = x @ w (+ b) and uses the plan's
 # elementwise derivative (for PWL: the per-segment slope m(z), identical to
 # autodiff of the unfused eval_coeff).  Backward fusion is a ROADMAP item.

@@ -156,7 +156,7 @@ def plan_missing_sites(arch: str, plan) -> list[str]:
     return list(_plan_missing_cached(arch, plan))
 
 
-def run_cell(arch: str, shape: str, multi_pod: bool, act_impl: str = "pwl",
+def run_cell(arch: str, shape: str, multi_pod: bool, act_impl: str = "jnp",
              plan=None, overrides: dict | None = None) -> dict:
     cell = SHAPE_CELLS[shape]
     over = dict(overrides or {})

@@ -60,7 +60,7 @@ def _serve_paged(model: Model, params, prompts: np.ndarray, args) -> int:
                    max_new_tokens=args.max_new)
         for i in range(len(prompts))
     ]
-    sfu.reset_fused_fallback_warnings()
+    sfu.reset_all_warnings()
     t0 = time.time()
     with warnings.catch_warnings(record=True) as caught:
         warnings.simplefilter("always")
@@ -139,7 +139,7 @@ def serve(argv=None):
     else:
         # fused by default: serving is the subsystem the fused kernels were
         # built for, and _serve_paged turns any silent fallback into rc=1
-        cfg = getter(args.arch, act_impl="pwl_fused")
+        cfg = getter(args.arch, act_impl="fused")
     plan = sfu.plan_for(cfg)
     print(f"[serve] activation plan {plan.fingerprint}: "
           f"{ {k: s.impl for k, s in plan.items()} }")

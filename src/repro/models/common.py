@@ -46,7 +46,7 @@ class ModelConfig:
     mlp_type: str = "swiglu"          # swiglu | geglu | mlp
     norm_type: str = "rmsnorm"        # rmsnorm | layernorm | nonparam_ln
     qkv_bias: bool = False
-    act_impl: str = "exact"           # exact | pwl | pwl_kernel | pwl_fused
+    act_impl: str = "exact"           # exact | jnp | kernel | fused (sfu.IMPLS)
     act_breakpoints: int = 32
     # explicit per-site plan pins: ((site_key, repro.sfu.ApproxSpec), ...),
     # applied last (last-match-wins) over the act_impl translation — e.g.

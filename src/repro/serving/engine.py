@@ -175,10 +175,11 @@ class PagedServingEngine:
     ) -> list[GenResult]:
         """Serve ``requests`` to completion under continuous batching and
         return their results in finish order."""
-        # per-session warn lifecycle: a fused fallback must be reported once
-        # per SESSION, not once per process — a monitoring loop that spins up
-        # a second engine would otherwise never see its regression
-        sfu.reset_fused_fallback_warnings()
+        # per-session warn lifecycle: a fused fallback (or sharding sanitize
+        # warning) must be reported once per SESSION, not once per process —
+        # a monitoring loop that spins up a second engine would otherwise
+        # never see its regression
+        sfu.reset_all_warnings()
         for r in requests:
             self.sched.submit(r)
         n_before = len(self.sched.results())

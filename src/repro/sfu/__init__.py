@@ -1,31 +1,37 @@
 """`repro.sfu` — the public activation-approximation API.
 
-One import gives the three layers of the Flex-SFU software analogue:
+One import gives the four layers of the Flex-SFU software analogue:
 
   * :class:`ApproxSpec` — how one activation site is approximated
-    (function, segment count, table dtype ``f32|bf16|f16``, impl
+    (function, segment count, table dtype ``f32|bf16|f16|int8``, impl
     ``exact|jnp|kernel|fused``, fit fingerprint);
   * :class:`ActivationPlan` + :func:`compile_plan` — per-site plans compiled
     once per model config and threaded through the model layers and fused
     kernels; JSON-serializable (:func:`dump_plan` / :func:`load_plan`);
   * :class:`TableStore` + :func:`get_store` — provenance-aware artifact
     store keyed by (fn, n_breakpoints, dtype, fit), with fit-on-miss and
-    multi-format quantization.
+    multi-format quantization;
+  * :mod:`repro.sfu.autotune` — the per-site (segments × dtype × impl ×
+    block) plan search: sweeps the space the paper optimizes over against
+    an accuracy budget and a measured-latency objective and emits the
+    winning plan as ``--plan``-consumable JSON (see docs/plans.md).
 
 Quick tour::
 
     from repro import sfu
     from repro.configs import get_config
 
-    cfg = get_config("qwen2.5-32b", act_impl="pwl_fused")
+    cfg = get_config("qwen2.5-32b", act_impl="fused")
     plan = sfu.compile_plan(cfg)         # {"mlp:silu": ApproxSpec(...)}
     sfu.dump_plan(plan, "plan.json")     # exact plan a run used
     act = plan.act("mlp:silu")           # elementwise callable
     table = sfu.get_store().get(plan.spec("mlp:silu"))   # PWLTable
 
-The deprecated ``repro.core.registry`` shim and the ``pwl_exempt`` /
-``pwl_breakpoint_overrides`` string knobs were deleted (ISSUE 5).  The
-remaining construction-time sugar on ``ModelConfig`` — ``act_impl``,
+``ModelConfig.act_impl`` takes the canonical :data:`IMPLS` names directly
+(``exact | jnp | kernel | fused``); the legacy ``pwl`` / ``pwl_kernel`` /
+``pwl_fused`` aliases and the ``sfu.LEGACY_IMPL`` translation table were
+deleted (ISSUE 8 — every CLI moved to ``--plan`` in ISSUE 7).  The
+construction-time sugar on ``ModelConfig`` — ``act_impl``,
 ``act_breakpoints``, ``act_table_dtype`` — translates uniformly across
 sites via :func:`compile_plan`; anything per-site goes through
 ``ModelConfig.act_site_specs`` pins or an explicit ``act_plan``:
@@ -33,9 +39,7 @@ sites via :func:`compile_plan`; anything per-site goes through
   ======================================  =================================
   config knob                             plan-API equivalent
   ======================================  =================================
-  ``act_impl="pwl"``                      ``ApproxSpec(impl="jnp")``
-  ``act_impl="pwl_kernel"``               ``ApproxSpec(impl="kernel")``
-  ``act_impl="pwl_fused"``                ``ApproxSpec(impl="fused")``
+  ``act_impl="jnp" | "kernel" | "fused"`` ``ApproxSpec(impl=...)``
   ``act_breakpoints=32``                  ``ApproxSpec(n_segments=33)``
   ``act_table_dtype="bf16"``              ``ApproxSpec(dtype="bf16")``
   per-site exemption / depth / dtype      ``act_site_specs`` pin
@@ -54,6 +58,7 @@ from .plan import (
     model_sites,
     plan_for,
     plan_missing_sites,
+    reset_all_warnings,
     reset_fused_fallback_warnings,
     resolve_spec,
     site_key,
@@ -65,7 +70,6 @@ from .spec import (
     FIT_SGD_V1,
     FIT_UNIFORM,
     IMPLS,
-    LEGACY_IMPL,
     ApproxSpec,
 )
 from .store import TABLE_DIR, TableStore, get_store, quantize_table
@@ -86,7 +90,6 @@ __all__ = [
     "quantize_table",
     "DTYPES",
     "IMPLS",
-    "LEGACY_IMPL",
     "DEFAULT_FIT",
     "FIT_SGD_V1",
     "FIT_UNIFORM",
@@ -98,4 +101,5 @@ __all__ = [
     "FUSED_SITES",
     "warn_fused_fallback",
     "reset_fused_fallback_warnings",
+    "reset_all_warnings",
 ]

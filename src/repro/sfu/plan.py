@@ -57,7 +57,7 @@ from typing import Callable, Iterator, Optional
 from repro.core import functions as F
 from repro.core import pwl
 
-from .spec import DEFAULT_FIT, LEGACY_IMPL, ApproxSpec
+from .spec import DEFAULT_FIT, IMPLS, ApproxSpec
 from .store import TableStore, get_store
 
 PLAN_SCHEMA = 1
@@ -104,6 +104,19 @@ def warn_fused_fallback(key: str, reason: str) -> None:
 def reset_fused_fallback_warnings() -> None:
     """Clear the warn-once state (tests)."""
     _FALLBACK_WARNED.clear()
+
+
+def reset_all_warnings() -> None:
+    """Reset every warn-once latch in one call: the fused-fallback warnings
+    above AND the sharding sanitize warnings
+    (``distributed.sharding.reset_sanitize_warnings``).  Session-scoped
+    consumers — the serving engine at ``run()`` start, tests that assert
+    under ``warnings.simplefilter("error")`` — previously had to know about
+    and call each latch individually; this is the one entry point."""
+    reset_fused_fallback_warnings()
+    from repro.distributed.sharding import reset_sanitize_warnings
+
+    reset_sanitize_warnings()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -242,25 +255,26 @@ def model_sites(cfg) -> list[tuple[str, str]]:
 def _site_spec(cfg, site: str, fn: str, dtype: str) -> ApproxSpec:
     """Resolve one (site, fn) from the uniform config knobs (``act_impl`` /
     ``act_breakpoints``); per-site divergence goes through
-    ``cfg.act_site_specs`` pins in :func:`compile_plan`."""
+    ``cfg.act_site_specs`` pins in :func:`compile_plan`.
+
+    ``act_impl`` uses the canonical :data:`~repro.sfu.spec.IMPLS` names
+    directly (``exact | jnp | kernel | fused``); the legacy
+    ``pwl``/``pwl_kernel``/``pwl_fused`` aliases are gone."""
     act_impl = getattr(cfg, "act_impl", "exact")
-    if act_impl not in LEGACY_IMPL:
+    if act_impl not in IMPLS:
         raise ValueError(
-            f"unknown activation mode '{act_impl}'; expected one of "
-            f"{tuple(LEGACY_IMPL)}"
+            f"unknown activation impl '{act_impl}'; expected one of {IMPLS} "
+            "(the legacy 'pwl'/'pwl_kernel'/'pwl_fused' aliases were removed "
+            "— use 'jnp'/'kernel'/'fused')"
         )
-    n_bp = cfg.act_breakpoints
-    if act_impl == "exact":
-        impl = "exact"
-    elif act_impl == "pwl_fused":
+    impl = act_impl
+    if impl == "fused" and site not in FUSED_SITES:
         # sites with a fused producer kernel compile to fused intent; the
         # SSM gates have none, so the plan records their unfused fallback
         # statically instead of re-deriving it per call
-        impl = "fused" if site in FUSED_SITES else "jnp"
-    else:
-        impl = LEGACY_IMPL[act_impl]
-    return ApproxSpec(fn=fn, n_segments=n_bp + 1, dtype=dtype, impl=impl,
-                      fit=DEFAULT_FIT)
+        impl = "jnp"
+    return ApproxSpec(fn=fn, n_segments=cfg.act_breakpoints + 1, dtype=dtype,
+                      impl=impl, fit=DEFAULT_FIT)
 
 
 def compile_plan(cfg) -> ActivationPlan:
@@ -273,8 +287,8 @@ def compile_plan(cfg) -> ActivationPlan:
          per-site pins, applied last-match-wins over the translation below;
       3. uniform translation of ``act_impl`` / ``act_breakpoints`` /
          ``act_table_dtype`` (construction-time sugar: the same spec at
-         every site, except ``pwl_fused`` compiles ``impl="jnp"`` for sites
-         without a fused producer kernel).
+         every site, except ``act_impl="fused"`` compiles ``impl="jnp"``
+         for sites without a fused producer kernel).
     """
     explicit = getattr(cfg, "act_plan", None)
     if explicit is not None:

@@ -6,10 +6,12 @@ about how to evaluate an activation function:
   * ``fn``         — target function name (must exist in ``core.functions``);
   * ``n_segments`` — PWL segment count (= breakpoints + 1, the paper's
                      hardware-visible table size);
-  * ``dtype``      — table storage format, ``"f32" | "bf16" | "f16"``
-                     (paper Sec. III: the SFU re-targets multiple data
-                     formats; Flex-PE/FQA treat precision as a first-class
-                     axis of PWL approximation);
+  * ``dtype``      — table storage format,
+                     ``"f32" | "bf16" | "f16" | "int8"`` (paper Sec. III:
+                     the SFU re-targets multiple data formats; Flex-PE/FQA
+                     treat precision as a first-class axis of PWL
+                     approximation — ``"int8"`` is the FQA-style full-space
+                     quantized grid, see ``core.quantize.full_space_int8``);
   * ``impl``       — execution strategy:
                      ``"exact"``  reference jnp transcendental,
                      ``"jnp"``    pure-jnp PWL (`core.pwl.eval_coeff`),
@@ -35,21 +37,22 @@ import jax.numpy as jnp
 
 from repro.core import functions as F
 
-# table storage formats (paper Secs. III & V: multi-format tables)
-DTYPES = ("f32", "bf16", "f16")
-JNP_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16, "f16": jnp.float16}
-
-# execution strategies
-IMPLS = ("exact", "jnp", "kernel", "fused")
-
-# legacy ``ModelConfig.act_impl`` strings -> ApproxSpec.impl
-LEGACY_IMPL = {
-    "exact": "exact",
-    "pwl": "jnp",
-    "pwl_kernel": "kernel",
-    "pwl_fused": "fused",
+# table storage formats (paper Secs. III & V: multi-format tables).
+# "int8" is the FQA full-space-quantized integer grid: tables are stored as
+# de-quantized int8-grid values (exact in f32), so its *evaluation* dtype in
+# JNP_DTYPES is float32 — the decode arithmetic stays full-rate while the
+# format error lives in the table.
+DTYPES = ("f32", "bf16", "f16", "int8")
+JNP_DTYPES = {
+    "f32": jnp.float32,
+    "bf16": jnp.bfloat16,
+    "f16": jnp.float16,
+    "int8": jnp.float32,
 }
-IMPL_TO_LEGACY = {v: k for k, v in LEGACY_IMPL.items()}
+
+# execution strategies (``ModelConfig.act_impl`` uses these names directly;
+# the legacy "pwl"/"pwl_kernel"/"pwl_fused" aliases are gone)
+IMPLS = ("exact", "jnp", "kernel", "fused")
 
 # fit fingerprints with reserved semantics
 FIT_SGD_V1 = "sgd-v1"      # shipped artifacts from core/fit.py (gen_tables)

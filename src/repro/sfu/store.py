@@ -58,15 +58,23 @@ def quantize_table(table: pwl.PWLTable, dtype: str) -> pwl.PWLTable:
     breakpoints, slopes, and intercepts are quantized to the narrow format —
     the per-element error of every downstream evaluation then includes the
     format error, exactly as if the hardware table memories stored that type.
+    ``"int8"`` is the FQA-style full-space-quantized integer grid
+    (``core.quantize.full_space_int8``): arrays come back as f32 holding
+    exactly the de-quantized int8-grid values, tagged ``storage="int8"``.
     """
     if dtype == "f32":
         return table
+    if dtype == "int8":
+        from repro.core.quantize import full_space_int8
+
+        return full_space_int8(table)
     np_dtype = JNP_DTYPES[dtype]
     return pwl.PWLTable(
         bp=np.asarray(table.bp).astype(np_dtype),
         m=np.asarray(table.m).astype(np_dtype),
         q=np.asarray(table.q).astype(np_dtype),
         name=table.name,
+        storage=dtype,
     )
 
 

@@ -106,7 +106,7 @@ def test_prefill_decode_matches_forward(arch):
 def test_pwl_activation_modes_close(arch):
     """Swapping exact->PWL activations must barely move the logits."""
     cfg_exact = get_reduced_config(arch, act_impl="exact")
-    cfg_pwl = get_reduced_config(arch, act_impl="pwl", act_breakpoints=32)
+    cfg_pwl = get_reduced_config(arch, act_impl="jnp", act_breakpoints=32)
     model_e, model_p = Model(cfg_exact), Model(cfg_pwl)
     params = model_e.init(jax.random.PRNGKey(0))
     batch = _batch_for(cfg_exact, jax.random.PRNGKey(1))

@@ -1,0 +1,235 @@
+"""repro.sfu.autotune: search space, measurement cache, driver, int8 format.
+
+Covers the ISSUE 8 acceptance criteria:
+  * the int8 full-space-quantized table format: storage tag, exact f32
+    representability (idempotent re-quantization), fused-epilogue decode
+    identity with the jnp evaluation, and a distinct EpiloguePlan
+    table_dtype (jit-cache / provenance separation from f32);
+  * plan JSON fingerprint stability for an autotune-style mixed plan
+    (satellite 3): int8 MLP vs f32 ssm at different segment counts
+    round-trips through dump/load with fingerprint + compiled equality;
+  * candidate space: fused arms only for FUSED_SITES, block sweeps only
+    for fused impls, deterministic enumeration order;
+  * MeasurementCache: compute-once semantics, disk persistence across
+    instances, machine keying;
+  * driver: emitted plan obeys the accuracy budget (site MSE no worse
+    than baseline), beats the baseline's measured latency, passes the e2e
+    gate, feeds ``--plan`` consumers, and is byte-identical across two
+    warm-cache runs (fixed seed).
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro  # noqa: F401
+from repro import sfu
+from repro.configs import get_reduced_config
+from repro.core import functions as F, pwl
+from repro.core.quantize import full_space_int8
+from repro.kernels.fused import epilogue
+from repro.sfu import autotune
+from repro.sfu.autotune import (
+    AutotuneConfig,
+    MeasurementCache,
+    autotune as run_autotune,
+)
+from repro.sfu.plan import FUSED_SITES, SITE_MLP, SITE_SOFTMAX, SITE_SSM
+
+
+# ---------------------------------------------------------------------------
+# int8 full-space-quantized table format
+
+
+def test_int8_storage_tag_and_idempotence():
+    table = sfu.get_store().get(fn="gelu_tanh", n_breakpoints=32)
+    q = full_space_int8(table)
+    assert q.storage == "int8"
+    assert q.bp.dtype == np.float32
+    # de-quantized int8-grid values are exactly representable in f32:
+    # re-quantizing is the identity
+    q2 = full_space_int8(q)
+    np.testing.assert_array_equal(q.bp, q2.bp)
+    np.testing.assert_array_equal(q.m, q2.m)
+    np.testing.assert_array_equal(q.q, q2.q)
+
+
+def test_int8_through_store_and_spec():
+    spec = sfu.ApproxSpec(fn="gelu_tanh", n_segments=33, dtype="int8",
+                          impl="jnp")
+    table = sfu.get_store().get(spec)
+    assert table.storage == "int8"
+    assert spec.jnp_dtype == jnp.float32  # evaluation dtype of the format
+    # format error is bounded: worse than f32 storage, still tiny
+    fspec = F.get("gelu_tanh")
+    lo, hi = fspec.default_range
+    m_int8 = pwl.mse(table, fspec, lo, hi)
+    m_f32 = pwl.mse(sfu.get_store().get(fn="gelu_tanh", n_breakpoints=32),
+                    fspec, lo, hi)
+    assert m_f32 <= m_int8 < 1e-3
+
+
+def test_int8_epilogue_plan_and_decode_identity():
+    spec = sfu.ApproxSpec(fn="silu", n_segments=33, dtype="int8", impl="fused")
+    table = sfu.get_store().get(spec)
+    plan, operands = epilogue.plan_and_operands(table, None)
+    assert plan.table_dtype == "int8"  # distinct jit-cache/provenance entry
+    f32_plan, _ = epilogue.plan_and_operands(
+        sfu.get_store().get(fn="silu", n_breakpoints=32), None)
+    assert plan != f32_plan
+    # the fused tile decode and the jnp evaluation agree bit-for-bit on the
+    # SAME quantized table (the format error lives in the table, not decode)
+    x = jnp.linspace(-6.0, 6.0, 256, dtype=jnp.float32).reshape(16, 16)
+    got = epilogue.plan_value_and_slope(plan, operands, x)[0]
+    want = pwl.eval_coeff(x, table)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: mixed-plan fingerprint stability through dump/load
+
+
+def test_mixed_plan_fingerprint_roundtrip(tmp_path):
+    plan = sfu.ActivationPlan(sites=(
+        ("mlp:gelu_tanh", sfu.ApproxSpec(fn="gelu_tanh", n_segments=17,
+                                         dtype="int8", impl="fused")),
+        ("ssm:silu", sfu.ApproxSpec(fn="silu", n_segments=65,
+                                    dtype="f32", impl="jnp")),
+    ))
+    p = sfu.dump_plan(plan, tmp_path / "mixed.json")
+    loaded = sfu.load_plan(p)
+    assert loaded == plan
+    assert loaded.fingerprint == plan.fingerprint
+    # dump of the loaded plan is byte-identical (stable serialization)
+    assert sfu.dump_plan(loaded, tmp_path / "again.json").read_text() == \
+        p.read_text()
+    # and a config carrying the loaded plan compiles to exactly it
+    cfg = get_reduced_config("repro-100m", act_plan=loaded)
+    assert sfu.plan_for(cfg) == plan
+    assert sfu.plan_for(cfg).fingerprint == plan.fingerprint
+
+
+# ---------------------------------------------------------------------------
+# search space
+
+
+def test_candidates_fused_only_for_fused_sites():
+    assert SITE_SSM not in FUSED_SITES
+    for c in autotune.candidates(SITE_SSM, "silu"):
+        assert c.impl != "fused"
+    impls = {c.impl for c in autotune.candidates(SITE_MLP, "gelu_tanh")}
+    assert impls == {"fused", "jnp", "exact"}
+
+
+def test_candidates_deterministic_and_exact_single():
+    a = autotune.candidates(SITE_MLP, "silu")
+    b = autotune.candidates(SITE_MLP, "silu")
+    assert a == b
+    assert sum(1 for c in a if c.impl == "exact") == 1
+
+
+def test_blocks_for():
+    assert autotune.blocks_for(SITE_MLP, "jnp") == (None,)
+    assert autotune.blocks_for(SITE_MLP, "exact") == (None,)
+    epi = autotune.blocks_for(SITE_MLP, "fused")
+    assert all(len(b) == 3 for b in epi)
+    flash = autotune.blocks_for(SITE_SOFTMAX, "fused")
+    assert all(len(b) == 2 for b in flash)
+
+
+# ---------------------------------------------------------------------------
+# measurement cache
+
+
+def test_measurement_cache_compute_once_and_persist(tmp_path):
+    cache = MeasurementCache(tmp_path)
+    calls = []
+
+    def compute():
+        calls.append(1)
+        return 42.0
+
+    key = {"kind": "t", "machine": {"backend": "cpu"}, "x": 1}
+    assert cache.get_or(key, compute) == 42.0
+    assert cache.get_or(key, compute) == 42.0
+    assert len(calls) == 1
+    # a fresh instance reads the same value off disk
+    cache2 = MeasurementCache(tmp_path)
+    assert cache2.get_or(key, compute) == 42.0
+    assert len(calls) == 1
+    # a different machine key never aliases
+    key2 = dict(key, machine={"backend": "tpu"})
+    assert cache2.get(key2) is None
+
+
+def test_cache_key_id_stable():
+    k = {"b": 2, "a": 1}
+    assert autotune.cache_key_id(k) == autotune.cache_key_id({"a": 1, "b": 2})
+    assert autotune.cache_key_id(k) != autotune.cache_key_id({"a": 1, "b": 3})
+
+
+# ---------------------------------------------------------------------------
+# measurements
+
+
+def test_site_mse_exact_zero_and_budget_ordering():
+    exact = sfu.ApproxSpec(fn="gelu_tanh", impl="exact")
+    assert autotune.site_mse(exact) == 0.0
+    m32 = autotune.site_mse(sfu.ApproxSpec(fn="gelu_tanh", n_segments=33))
+    m8 = autotune.site_mse(sfu.ApproxSpec(fn="gelu_tanh", n_segments=9))
+    assert 0.0 < m32 < m8
+
+
+# ---------------------------------------------------------------------------
+# driver end-to-end (quick mode, reduced config)
+
+
+@pytest.fixture(scope="module")
+def quick_result(tmp_path_factory):
+    cache_dir = tmp_path_factory.mktemp("autotune_cache")
+    at = AutotuneConfig(arch="repro-100m", reduced=True, quick=True,
+                        cache_dir=str(cache_dir))
+    return at, run_autotune(at)
+
+
+def test_driver_objective_and_gate(quick_result):
+    at, res = quick_result
+    rpt = res.report
+    # accuracy budget: every chosen site's MSE is within the baseline's
+    which = "accuracy_first" if rpt["accuracy_fallback"] else "chosen"
+    for e in rpt["sites"]:
+        assert e[which]["mse"] <= e["budget_mse"] * (1 + 1e-9)
+        # latency objective: never worse than the baseline spec (which is
+        # always a qualifying candidate at its own default block)
+        assert e[which]["us"] <= e["baseline"]["us"] * (1 + 1e-9)
+    assert rpt["e2e"]["top1_agree"] >= at.min_top1
+    assert rpt["totals"]["chosen_us"] <= rpt["totals"]["baseline_us"]
+
+
+def test_driver_deterministic_with_warm_cache(quick_result):
+    at, res = quick_result
+    res2 = run_autotune(at)
+    assert res2.plan == res.plan
+    assert res2.plan.fingerprint == res.plan.fingerprint
+    assert res2.plan.dumps() == res.plan.dumps()  # byte-identical
+    assert res2.report["cache"]["misses"] == 0  # fully warm
+
+
+def test_driver_plan_feeds_model(quick_result, tmp_path):
+    _, res = quick_result
+    p = sfu.dump_plan(res.plan, tmp_path / "plan.json")
+    loaded = sfu.load_plan(p)
+    cfg = get_reduced_config("repro-100m", act_plan=loaded)
+    assert sfu.plan_missing_sites(cfg, loaded) == []
+    m = autotune.e2e_logit_check(cfg, loaded)
+    assert m["top1_agree"] >= 0.98
+
+
+def test_report_provenance_labels_interpret_mode(quick_result):
+    _, res = quick_result
+    rpt = res.report
+    for k in ("backend", "interpret_mode", "device", "plan_fingerprint"):
+        assert k in rpt
+    # the report is JSON-serializable as written by the CLI/benchmark
+    json.dumps(rpt)

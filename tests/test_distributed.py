@@ -81,7 +81,7 @@ def test_host_mesh_train_dp2_tp2():
         from repro.models import Model, ShapeCell
         from repro.optim import adamw
 
-        cfg = get_reduced_config("qwen2.5-32b", act_impl="pwl")
+        cfg = get_reduced_config("qwen2.5-32b", act_impl="jnp")
         mesh = make_host_mesh(model=2)
         cell = ShapeCell("t", 64, 4, "train")
         fn, in_sh, out_sh, structs, extra = build_train_step(cfg, mesh, cell, microbatches=2)

@@ -321,7 +321,7 @@ def test_prefill_past_score_cap_runs_flash_kernel(monkeypatch):
     """Past the dense cap the layer path must emit the fused flash kernel
     (exactly one pallas_call for attention) and warn nothing."""
     monkeypatch.setattr(layers, "DENSE_FUSED_SOFTMAX_MAX_SCORES", 4)
-    cfg = _attn_cfg(act_impl="pwl_fused", pwl_softmax=True)
+    cfg = _attn_cfg(act_impl="fused", pwl_softmax=True)
     params = _attn_params(cfg)
     x = _rand(3, (2, 16, 64), scale=0.5)
     with warnings.catch_warnings(record=True) as rec:
@@ -340,7 +340,7 @@ def test_acceptance_16k_prefill_and_window256_no_fallback():
     """ISSUE 5 acceptance: fused-planned attn.softmax sites execute with
     zero fallback warnings at S=16k causal prefill and window=256 local
     attention on a single device (trace-level — warnings fire at trace)."""
-    cfg = _attn_cfg(act_impl="pwl_fused", pwl_softmax=True,
+    cfg = _attn_cfg(act_impl="fused", pwl_softmax=True,
                     sliding_window=256)
     plan = sfu.plan_for(cfg)
     exp_fn = layers.resolve_exp(cfg, plan)
@@ -393,7 +393,7 @@ def test_one_device_mesh_keeps_fused_and_never_warns():
         active_mesh_rules, make_rules, use_rules,
     )
 
-    cfg = _attn_cfg(act_impl="pwl_fused", pwl_softmax=True)
+    cfg = _attn_cfg(act_impl="fused", pwl_softmax=True)
     plan = sfu.plan_for(cfg)
     exp_fn = layers.resolve_exp(cfg, plan)
     q, k, v = _qkv(14, S=16, H=cfg.n_heads, Hkv=cfg.n_kv_heads,

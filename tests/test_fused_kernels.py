@@ -4,8 +4,8 @@ Covers the ISSUE 1 acceptance criteria: fused linear/GLU match the unfused
 PWL reference to <=1e-5 max abs error (f32, interpret mode) across dtypes,
 non-aligned shapes, and all three GLU activations the model zoo uses; the
 fused MLP is a genuinely single pass (exactly one pallas_call, no separate
-elementwise PWL dispatch in the jaxpr); and act_impl="pwl_fused" runs
-end-to-end through the model path, matching act_impl="pwl" logits.
+elementwise PWL dispatch in the jaxpr); and act_impl="fused" runs
+end-to-end through the model path, matching act_impl="jnp" logits.
 """
 import dataclasses
 
@@ -195,10 +195,10 @@ def test_fused_ops_grads_match_unfused(op):
 
 
 def test_model_train_step_pwl_fused_grads_finite():
-    """act_impl="pwl_fused" must survive jax.grad through the whole model."""
+    """act_impl="fused" must survive jax.grad through the whole model."""
     from repro.models import Model
 
-    cfg = _tiny_cfg(act_impl="pwl_fused")
+    cfg = _tiny_cfg(act_impl="fused")
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     batch = {
@@ -247,7 +247,7 @@ def test_pwl_eval_tile_is_shared_with_standalone_kernel():
 
 
 # ---------------------------------------------------------------------------
-# model plumbing (act_impl="pwl_fused")
+# model plumbing (act_impl="fused")
 
 
 def _tiny_cfg(**over):
@@ -257,7 +257,7 @@ def _tiny_cfg(**over):
 
 
 def test_plan_fused_table_and_elementwise_fallback():
-    assert "pwl_fused" in sfu.LEGACY_IMPL
+    assert "fused" in sfu.IMPLS
     # elementwise fallback of impl="fused" == unfused pwl
     act = sfu.resolve_spec(
         sfu.ApproxSpec(fn="silu", n_segments=33, impl="fused"))
@@ -265,11 +265,11 @@ def test_plan_fused_table_and_elementwise_fallback():
     np.testing.assert_allclose(
         act(x), pwl.eval_coeff(x, sfu.get_store().get(fn="silu", n_breakpoints=32)), atol=1e-6
     )
-    cfg = _tiny_cfg(act_impl="pwl_fused")
+    cfg = _tiny_cfg(act_impl="fused")
     assert sfu.plan_for(cfg).fused_table("mlp:gelu_tanh") is not None
     assert sfu.plan_for(
-        _tiny_cfg(act_impl="pwl")).fused_table("mlp:gelu_tanh") is None
-    exempt = _tiny_cfg(act_impl="pwl_fused", act_site_specs=(
+        _tiny_cfg(act_impl="jnp")).fused_table("mlp:gelu_tanh") is None
+    exempt = _tiny_cfg(act_impl="fused", act_site_specs=(
         ("mlp:gelu_tanh", sfu.ApproxSpec(fn="gelu_tanh", impl="exact")),
     ))
     assert sfu.plan_for(exempt).fused_table("mlp:gelu_tanh") is None
@@ -280,7 +280,7 @@ def test_model_forward_pwl_fused_matches_pwl(mlp_type):
     from repro.models import Model
 
     logits = {}
-    for impl in ("pwl", "pwl_fused"):
+    for impl in ("jnp", "fused"):
         cfg = _tiny_cfg(act_impl=impl, mlp_type=mlp_type)
         model = Model(cfg)
         params = model.init(jax.random.PRNGKey(0))
@@ -296,7 +296,7 @@ def test_model_forward_pwl_fused_matches_pwl(mlp_type):
         logits[impl] = out
         assert bool(jnp.all(jnp.isfinite(out)))
     np.testing.assert_allclose(
-        logits["pwl_fused"], logits["pwl"], atol=1e-5, rtol=1e-4
+        logits["fused"], logits["jnp"], atol=1e-5, rtol=1e-4
     )
 
 
@@ -328,7 +328,7 @@ def test_fused_dispatch_runs_per_shard_on_multidevice_mesh():
         from repro.distributed import sharding
         from repro.models import layers
 
-        cfg = dataclasses.replace(reduced(), act_impl="pwl_fused",
+        cfg = dataclasses.replace(reduced(), act_impl="fused",
                                   dtype=jnp.float32)
         d, f = cfg.d_model, cfg.d_ff
         k = jax.random.PRNGKey
@@ -345,7 +345,7 @@ def test_fused_dispatch_runs_per_shard_on_multidevice_mesh():
             assert "pallas_call" in jaxpr, "fused kernel missing under mesh"
             assert "shmap_body" in jaxpr or "shard_map" in jaxpr, jaxpr[:2000]
             y = jax.jit(lambda x: layers.mlp(cfg, params, x))(x)
-        cfg_pwl = dataclasses.replace(cfg, act_impl="pwl")
+        cfg_pwl = dataclasses.replace(cfg, act_impl="jnp")
         y_ref = layers.mlp(cfg_pwl, params, x)
         np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                                    atol=1e-5, rtol=1e-5)
@@ -375,7 +375,7 @@ def test_pwl_backward_has_no_onehot_blowup():
 
 
 def test_mlp_layer_exempt_falls_back_to_unfused():
-    cfg = _tiny_cfg(act_impl="pwl_fused", act_site_specs=(
+    cfg = _tiny_cfg(act_impl="fused", act_site_specs=(
         ("mlp:gelu_tanh", sfu.ApproxSpec(fn="gelu_tanh", impl="exact")),
     ))
     d, f = cfg.d_model, cfg.d_ff

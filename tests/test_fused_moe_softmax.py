@@ -284,13 +284,13 @@ def test_moe_layer_fused_matches_unfused():
     outs = {}
     with warnings.catch_warnings(record=True) as rec:
         warnings.simplefilter("always")
-        for impl in ("pwl", "pwl_fused"):
+        for impl in ("jnp", "fused"):
             cfg = _moe_cfg(act_impl=impl)
             params = _moe_params(cfg)
             y, aux = moe_mod.moe_layer(cfg, params, x)
             outs[impl] = y
     assert not [w for w in rec if "falling back" in str(w.message)]
-    np.testing.assert_allclose(outs["pwl_fused"], outs["pwl"], atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(outs["fused"], outs["jnp"], atol=1e-5, rtol=1e-4)
 
 
 @pytest.mark.parametrize("tdtype", ["f32", "bf16", "f16"])
@@ -303,12 +303,12 @@ def test_moe_layer_fused_vs_unfused_all_table_dtypes(tdtype):
     format arithmetic rounding, bounded by the format's table error."""
     x = _rand(3, (2, 8, 64), scale=1.0)
     outs = {}
-    for impl in ("pwl", "pwl_fused"):
+    for impl in ("jnp", "fused"):
         cfg = _moe_cfg(act_impl=impl, act_table_dtype=tdtype)
         params = _moe_params(cfg)
         outs[impl], _ = moe_mod.moe_layer(cfg, params, x)
     np.testing.assert_allclose(
-        outs["pwl_fused"], outs["pwl"], atol=BOUNDS[tdtype], rtol=0.05
+        outs["fused"], outs["jnp"], atol=BOUNDS[tdtype], rtol=0.05
     )
 
 
@@ -332,7 +332,7 @@ def test_attention_fused_softmax_vs_unfused_all_table_dtypes(tdtype):
     outs = {}
     with warnings.catch_warnings(record=True) as rec:
         warnings.simplefilter("always")
-        for impl in ("pwl", "pwl_fused"):
+        for impl in ("jnp", "fused"):
             cfg = _attn_cfg(act_impl=impl, pwl_softmax=True,
                             act_table_dtype=tdtype)
             params = _attn_params(cfg)
@@ -340,13 +340,13 @@ def test_attention_fused_softmax_vs_unfused_all_table_dtypes(tdtype):
             outs[impl] = y
     assert not [w for w in rec if "falling back" in str(w.message)]
     np.testing.assert_allclose(
-        outs["pwl_fused"], outs["pwl"], atol=BOUNDS[tdtype], rtol=0.05
+        outs["fused"], outs["jnp"], atol=BOUNDS[tdtype], rtol=0.05
     )
 
 
 def test_decode_attention_fused_softmax_matches_unfused():
-    cfg = _attn_cfg(act_impl="pwl_fused", pwl_softmax=True)
-    cfg_ref = _attn_cfg(act_impl="pwl", pwl_softmax=True)
+    cfg = _attn_cfg(act_impl="fused", pwl_softmax=True)
+    cfg_ref = _attn_cfg(act_impl="jnp", pwl_softmax=True)
     B, T = 2, 12
     Hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
     q = _rand(0, (B, 1, cfg.n_heads, dh), scale=0.5)
@@ -376,9 +376,9 @@ def test_moe_model_end_to_end_fused_no_fallback():
     logits = {}
     with warnings.catch_warnings(record=True) as rec:
         warnings.simplefilter("always")
-        for impl in ("pwl", "pwl_fused"):
+        for impl in ("jnp", "fused"):
             cfg = _moe_cfg(act_impl=impl, pwl_softmax=True)
-            if impl == "pwl_fused":
+            if impl == "fused":
                 plan = sfu.compile_plan(cfg)
                 assert plan.spec("moe.expert:silu").impl == "fused"
                 assert plan.spec("attn.softmax:exp").impl == "fused"
@@ -387,14 +387,14 @@ def test_moe_model_end_to_end_fused_no_fallback():
             logits[impl], _ = m.forward(params, batch)
     assert not [w for w in rec if "falling back" in str(w.message)]
     np.testing.assert_allclose(
-        logits["pwl_fused"], logits["pwl"], atol=1e-4, rtol=1e-4
+        logits["fused"], logits["jnp"], atol=1e-4, rtol=1e-4
     )
 
 
 def test_moe_model_fused_grads_finite():
     from repro.models import Model
 
-    cfg = _moe_cfg(act_impl="pwl_fused", pwl_softmax=True)
+    cfg = _moe_cfg(act_impl="fused", pwl_softmax=True)
     m = Model(cfg)
     params = m.init(jax.random.PRNGKey(0))
     batch = {
@@ -436,8 +436,8 @@ def test_dense_softmax_cap_routes_to_fused_flash(monkeypatch):
     the flash-attention kernel with the PWL-exp online softmax takes over
     (ISSUE 5); there is no fallback warning anymore."""
     monkeypatch.setattr(layers, "DENSE_FUSED_SOFTMAX_MAX_SCORES", 4)
-    cfg = _attn_cfg(act_impl="pwl_fused", pwl_softmax=True)
-    cfg_ref = _attn_cfg(act_impl="pwl", pwl_softmax=True)
+    cfg = _attn_cfg(act_impl="fused", pwl_softmax=True)
+    cfg_ref = _attn_cfg(act_impl="jnp", pwl_softmax=True)
     params = _attn_params(cfg)
     x = _rand(3, (2, 16, 64), scale=0.5)
     with warnings.catch_warnings(record=True) as rec:
@@ -453,8 +453,8 @@ def test_narrow_sliding_window_routes_to_fused_flash():
     """A local-attention layer whose window covers under half the KV must
     run the fused flash kernel's banded KV loop (skipped out-of-window
     blocks), not dense fused scores — and not fall back (ISSUE 5)."""
-    cfg = _attn_cfg(act_impl="pwl_fused", pwl_softmax=True, sliding_window=4)
-    cfg_ref = _attn_cfg(act_impl="pwl", pwl_softmax=True, sliding_window=4)
+    cfg = _attn_cfg(act_impl="fused", pwl_softmax=True, sliding_window=4)
+    cfg_ref = _attn_cfg(act_impl="jnp", pwl_softmax=True, sliding_window=4)
     params = _attn_params(cfg)
     x = _rand(3, (2, 16, 64), scale=0.5)  # S=16 > 2*window
     with warnings.catch_warnings(record=True) as rec:
@@ -468,8 +468,8 @@ def test_narrow_sliding_window_routes_to_fused_flash():
 def test_wide_sliding_window_stays_fused():
     """A window covering most of the KV keeps the fused dense path (the
     in-kernel window iota mask matches the banded flash result)."""
-    cfg = _attn_cfg(act_impl="pwl_fused", pwl_softmax=True, sliding_window=12)
-    cfg_ref = _attn_cfg(act_impl="pwl", pwl_softmax=True, sliding_window=12)
+    cfg = _attn_cfg(act_impl="fused", pwl_softmax=True, sliding_window=12)
+    cfg_ref = _attn_cfg(act_impl="jnp", pwl_softmax=True, sliding_window=12)
     params = _attn_params(cfg)
     x = _rand(3, (2, 16, 64), scale=0.5)  # S=16 <= 2*window
     with warnings.catch_warnings(record=True) as rec:
@@ -485,8 +485,8 @@ def test_wide_decode_cache_routes_to_fused_flash(monkeypatch):
     the fused flash kernel's blocked KV loop (ragged kv_valid_len masking)
     — still fused, no fallback warning (ISSUE 5)."""
     monkeypatch.setattr(layers, "DENSE_FUSED_SOFTMAX_MAX_WIDTH", 8)
-    cfg = _attn_cfg(act_impl="pwl_fused", pwl_softmax=True)
-    cfg_ref = _attn_cfg(act_impl="pwl", pwl_softmax=True)
+    cfg = _attn_cfg(act_impl="fused", pwl_softmax=True)
+    cfg_ref = _attn_cfg(act_impl="jnp", pwl_softmax=True)
     B, T = 2, 12  # T > patched width cap
     Hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
     params = _attn_params(cfg)
@@ -512,7 +512,7 @@ def test_act_site_specs_pin_exempts_single_site():
     replacement for the deleted pwl_exempt string knob."""
     pinned = ModelConfig(
         name="t", family="ssm", n_layers=2, d_model=16, n_heads=2,
-        n_kv_heads=2, d_ff=32, vocab_size=64, act_impl="pwl",
+        n_kv_heads=2, d_ff=32, vocab_size=64, act_impl="jnp",
         act_breakpoints=32, ssm_state=8,
         act_site_specs=(
             ("ssm:silu", sfu.ApproxSpec(fn="silu", impl="exact")),
@@ -527,7 +527,7 @@ def test_act_site_specs_pin_exempts_single_site():
 def test_act_site_specs_can_pin_segments_and_dtype():
     cfg = ModelConfig(
         name="t", family="dense", n_layers=2, d_model=16, n_heads=2,
-        n_kv_heads=2, d_ff=32, vocab_size=64, act_impl="pwl",
+        n_kv_heads=2, d_ff=32, vocab_size=64, act_impl="jnp",
         activation="gelu",
         act_site_specs=(
             ("mlp:gelu", sfu.ApproxSpec(fn="gelu", n_segments=9,
@@ -543,7 +543,7 @@ def test_act_site_specs_unmatched_pin_raises():
     dropping it would undo the accuracy exemption it exists to enforce."""
     cfg = ModelConfig(
         name="t", family="dense", n_layers=2, d_model=16, n_heads=2,
-        n_kv_heads=2, d_ff=32, vocab_size=64, act_impl="pwl",
+        n_kv_heads=2, d_ff=32, vocab_size=64, act_impl="jnp",
         act_site_specs=(
             ("ssm.silu", sfu.ApproxSpec(fn="silu", impl="exact")),  # typo'd
         ),
@@ -554,6 +554,6 @@ def test_act_site_specs_unmatched_pin_raises():
 
 def test_shipped_ssm_configs_pin_ssm_silu_exact():
     for arch in ("mamba2-2.7b", "jamba-v0.1-52b"):
-        for mode in ("pwl", "pwl_kernel", "pwl_fused"):
+        for mode in ("jnp", "kernel", "fused"):
             plan = sfu.compile_plan(get_config(arch, act_impl=mode))
             assert plan.spec("ssm:silu").impl == "exact", (arch, mode)

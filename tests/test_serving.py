@@ -268,7 +268,7 @@ class TestPagedFlashDecode:
 # model-level paged vs dense parity
 
 
-def _cfg(act_impl="pwl_fused", **kw):
+def _cfg(act_impl="fused", **kw):
     return dataclasses.replace(get_reduced_config("repro-100m"),
                                act_impl=act_impl, **kw)
 
@@ -353,7 +353,7 @@ class TestModelPagedParity:
         loop under the SAME plan."""
         rng = np.random.default_rng(3)
         p = rng.integers(1, 500, size=10).tolist()
-        model = Model(_cfg("pwl"))
+        model = Model(_cfg("jnp"))
         params = model.init(jax.random.PRNGKey(0))
         ref = _dense_greedy(model, params, p, 4)
         engine = PagedServingEngine(model, params, max_slots=1,
@@ -362,6 +362,6 @@ class TestModelPagedParity:
 
     def test_paged_cache_rejects_non_attn_stacks(self):
         cfg = dataclasses.replace(get_reduced_config("gemma3-1b"),
-                                  act_impl="pwl")
+                                  act_impl="jnp")
         with pytest.raises(ValueError, match="global-attention"):
             Model(cfg).make_paged_cache(8, 16)

@@ -33,7 +33,7 @@ X_GRID = jnp.linspace(-12.0, 12.0, 257, dtype=jnp.float32)
 def _tiny_cfg(**kw):
     base = dict(
         name="tiny", family="dense", n_layers=2, d_model=16, n_heads=2,
-        n_kv_heads=2, d_ff=32, vocab_size=64, act_impl="pwl",
+        n_kv_heads=2, d_ff=32, vocab_size=64, act_impl="jnp",
         act_breakpoints=16,
     )
     base.update(kw)
@@ -43,7 +43,7 @@ def _tiny_cfg(**kw):
 def _ssm_cfg(**kw):
     base = dict(
         name="tiny-ssm", family="ssm", n_layers=2, d_model=16, n_heads=2,
-        n_kv_heads=2, d_ff=32, vocab_size=64, act_impl="pwl",
+        n_kv_heads=2, d_ff=32, vocab_size=64, act_impl="jnp",
         act_breakpoints=16, ssm_state=8,
     )
     base.update(kw)
@@ -106,7 +106,7 @@ class TestSiteResolution:
         assert plan.spec("ssm:softplus").n_segments == 17
 
     def test_fused_only_on_mlp_site(self):
-        cfg = _ssm_cfg(act_impl="pwl_fused")
+        cfg = _ssm_cfg(act_impl="fused")
         plan = sfu.compile_plan(cfg)
         assert plan.spec("mlp:silu").impl == "fused"
         assert plan.spec("ssm:silu").impl == "jnp"  # static unfused fallback
@@ -146,7 +146,7 @@ class TestSiteResolution:
 class TestPlanSerialization:
     def test_round_trip_all_shipped_configs(self):
         for arch in ARCH_IDS:
-            cfg = get_config(arch, act_impl="pwl_fused")
+            cfg = get_config(arch, act_impl="fused")
             plan = sfu.compile_plan(cfg)
             blob = plan.dumps()
             again = sfu.ActivationPlan.loads(blob)
@@ -154,7 +154,7 @@ class TestPlanSerialization:
             assert again.fingerprint == plan.fingerprint, arch
 
     def test_dump_load_file(self, tmp_path):
-        plan = sfu.compile_plan(get_config("mamba2-2.7b", act_impl="pwl"))
+        plan = sfu.compile_plan(get_config("mamba2-2.7b", act_impl="jnp"))
         path = sfu.dump_plan(plan, tmp_path / "plan.json")
         assert sfu.load_plan(path) == plan
         # file is plain JSON another tool can read
@@ -180,7 +180,7 @@ def test_compile_plan_all_modes_all_archs(arch):
     """Every shipped config compiles a non-empty plan under every act_impl
     mode, each spec resolves to a working elementwise callable, and the
     fused-table decision point agrees with the compiled impl."""
-    for mode in sfu.LEGACY_IMPL:
+    for mode in sfu.IMPLS:
         cfg = get_config(arch, act_impl=mode)
         plan = sfu.compile_plan(cfg)
         assert len(plan) > 0, arch
@@ -196,7 +196,7 @@ def test_compile_plan_all_modes_all_archs(arch):
 
 
 def test_unknown_act_impl_mode_raises():
-    with pytest.raises(ValueError, match="unknown activation mode"):
+    with pytest.raises(ValueError, match="unknown activation impl"):
         sfu.compile_plan(_tiny_cfg(act_impl="pwl_quantum"))
 
 
@@ -204,7 +204,7 @@ class TestResolveExp:
     def test_exp_plan_matches_table_eval(self):
         from repro.models import layers
 
-        cfg = _tiny_cfg(pwl_softmax=True, act_impl="pwl", act_breakpoints=32)
+        cfg = _tiny_cfg(pwl_softmax=True, act_impl="jnp", act_breakpoints=32)
         exp_fn = layers.resolve_exp(cfg)
         table = sfu.get_store().get(fn="exp", n_breakpoints=32)
         x = jnp.linspace(-10.0, 0.0, 129)
@@ -216,7 +216,7 @@ class TestResolveExp:
     def test_exp_exact_when_disabled(self):
         from repro.models import layers
 
-        assert layers.resolve_exp(_tiny_cfg(act_impl="pwl")) is jnp.exp
+        assert layers.resolve_exp(_tiny_cfg(act_impl="jnp")) is jnp.exp
         assert layers.resolve_exp(_tiny_cfg(pwl_softmax=True, act_impl="exact")) is jnp.exp
 
 
@@ -362,7 +362,7 @@ class TestTableDtypes:
         """act_table_dtype routes through a whole (reduced) model forward."""
         from repro.models import Model
 
-        base = get_reduced_config("olmo-1b", act_impl="pwl", dtype=jnp.float32)
+        base = get_reduced_config("olmo-1b", act_impl="jnp", dtype=jnp.float32)
         cfg_q = dataclasses.replace(base, act_table_dtype="bf16")
         batch_tokens = jax.random.randint(
             jax.random.PRNGKey(1), (2, 8), 0, base.vocab_size
@@ -389,7 +389,7 @@ def test_explicit_plan_through_model_forward():
         (f"mlp:{act}", sfu.ApproxSpec(fn=act, n_segments=33, impl="jnp")),
     ))
     cfg_plan = dataclasses.replace(base, act_plan=explicit, act_impl="exact")
-    cfg_knob = dataclasses.replace(base, act_impl="pwl", act_breakpoints=32)
+    cfg_knob = dataclasses.replace(base, act_impl="jnp", act_breakpoints=32)
     tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, base.vocab_size)
     out = {}
     for tag, cfg in (("plan", cfg_plan), ("knob", cfg_knob)):

@@ -42,7 +42,7 @@ def test_train_step_2x2_mesh_zero_fallbacks():
         from repro.models import Model, ShapeCell
         from repro.optim import adamw
 
-        cfg = get_reduced_config("repro-100m", act_impl="pwl_fused",
+        cfg = get_reduced_config("repro-100m", act_impl="fused",
                                  pwl_softmax=True, force_dp_only=False)
         mesh = make_host_mesh(model=2)   # (data=2, model=2)
         cell = ShapeCell("t", 64, 4, "train")
@@ -83,7 +83,7 @@ def test_paged_serve_2x2_mesh_zero_fallbacks_and_token_parity():
         from repro.models import Model
         from repro.serving import GenRequest, PagedServingEngine
 
-        cfg = get_reduced_config("repro-100m", act_impl="pwl_fused",
+        cfg = get_reduced_config("repro-100m", act_impl="fused",
                                  pwl_softmax=True, force_dp_only=False)
         model = Model(cfg)
         params = model.init(jax.random.PRNGKey(0))
@@ -125,7 +125,7 @@ def test_moe_expert_parallel_fused_parity():
         from repro.distributed.sharding import make_rules, use_rules
         from repro.models import Model
 
-        cfg = get_reduced_config("olmoe-1b-7b", act_impl="pwl_fused",
+        cfg = get_reduced_config("olmoe-1b-7b", act_impl="fused",
                                  capacity_factor=8.0, dtype=jnp.float32)
         model = Model(cfg)
         params = model.init(jax.random.PRNGKey(0))
@@ -263,7 +263,7 @@ def test_engine_session_warns_once_per_session_on_seq_sharded_cache():
         from repro.models import Model
         from repro.serving import GenRequest, PagedServingEngine
 
-        cfg = get_reduced_config("repro-100m", act_impl="pwl_fused",
+        cfg = get_reduced_config("repro-100m", act_impl="fused",
                                  pwl_softmax=True, force_dp_only=False)
         mesh = jax.make_mesh((2, 3), ("data", "model"))
         rules = make_rules(cfg, mesh)
