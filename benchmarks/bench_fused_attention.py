@@ -21,7 +21,10 @@ fusion win and the approximation cost.  Emits CSV rows via
 benchmarks/common.py AND machine-readable ``BENCH_fused_attention.json``
 at the repo root: per-cell mode rows plus a coverage/MSE summary
 (``fused_flash`` must cover >= ``dense_fused`` and stay within 2x of its
-MSE — the ISSUE 5 acceptance bar).
+MSE — the ISSUE 5 acceptance bar).  Train-mode cells (ISSUE 9) time a full
+grad step per causal cell under both ``impl_bwd`` implementations and
+record the compiled temp-memory footprint: the fused blocked backward's
+grows O(S), the dense recompute oracle's O(S*T).
 
     PYTHONPATH=src python benchmarks/bench_fused_attention.py [--quick]
 
@@ -48,9 +51,9 @@ DEFAULT_OUT = (
 )
 
 try:  # package-style (python -m benchmarks.run) or script-style invocation
-    from .common import emit, provenance, time_fn, write_bench_json
+    from .common import emit, provenance, temp_bytes, time_fn, write_bench_json
 except ImportError:
-    from common import emit, provenance, time_fn, write_bench_json
+    from common import emit, provenance, temp_bytes, time_fn, write_bench_json
 
 # nominal prefill cells (ISSUE 5): causal and window=256 at S in {1k, 4k, 16k}
 NOMINAL_S = (1024, 4096, 16384)
@@ -146,6 +149,42 @@ def main(argv=None):
             cell["modes"][mode] = row
         results.append(cell)
 
+    # train-mode cells (ISSUE 9): a full grad step through the flash kernel
+    # (causal prefill) under both backward implementations.  The fused
+    # backward is 4 blocked Pallas passes over O(S) saved stats — its
+    # temp_bytes grow linearly in S; the recompute oracle autodiffs the
+    # dense reference and grows with S*T (visible across the quick-mode
+    # S_run points too).
+    train_cells = []
+    for s_nom in NOMINAL_S:
+        s_run = max(128, s_nom // scale)
+        kq, kk, kv = jax.random.split(jax.random.PRNGKey(s_nom), 3)
+        q = jax.random.normal(kq, (B, s_run, H, DH), dtype)
+        k = jax.random.normal(kk, (B, s_run, HKV, DH), dtype)
+        v = jax.random.normal(kv, (B, s_run, HKV, DH), dtype)
+        cell = {"S": s_nom, "S_run": s_run, "impl_bwd": {}}
+        g_fused = None
+        for impl_bwd in fused.IMPL_BWD_MODES:
+            def loss(q, k, v, _m=impl_bwd):
+                out = fused.fused_flash_attention(
+                    q, k, v, table=table, causal=True, impl_bwd=_m)
+                return jnp.sum(out * out)
+
+            gfn = jax.grad(loss, argnums=(0, 1, 2))
+            us = time_fn(jax.jit(gfn), q, k, v, warmup=1, iters=iters)
+            row = {"us_per_step": round(us, 2),
+                   "temp_bytes": temp_bytes(gfn, q, k, v)}
+            g = [a.astype(jnp.float32) for a in jax.jit(gfn)(q, k, v)]
+            if g_fused is None:
+                g_fused = g
+            else:
+                row["grad_max_abs_diff_vs_fused"] = float(max(
+                    jnp.max(jnp.abs(a - b)) for a, b in zip(g, g_fused)))
+            cell["impl_bwd"][impl_bwd] = row
+            emit(f"attn_train_S{s_nom}_{impl_bwd}", us,
+                 f"temp_bytes={row['temp_bytes']}")
+        train_cells.append(cell)
+
     coverage = {
         m: sum(1 for c in results if c["modes"][m]["supported"])
         for m in ("fused_flash", "jnp_flash", "dense_fused")
@@ -163,6 +202,7 @@ def main(argv=None):
                   "dtype": str(jnp.dtype(dtype))},
         "breakpoints": args.breakpoints,
         "cells": results,
+        "train_cells": train_cells,
         "summary": {
             "coverage": coverage,
             "fused_flash_covers_dense": coverage["fused_flash"]

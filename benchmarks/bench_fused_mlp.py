@@ -10,7 +10,10 @@ activations.  This benchmark times one GLU MLP block
 under the four act_impl modes on the current backend.  Emits CSV rows
 ``name,us_per_call,derived`` via benchmarks/common.py AND a machine-readable
 ``BENCH_fused_mlp.json`` (per-mode latency + output MSE vs the exact mode)
-at the repo root, so the perf trajectory is tracked across PRs.
+at the repo root, so the perf trajectory is tracked across PRs.  Train-mode
+cells (ISSUE 9) time a grad step through the fused GLU under both backward
+implementations (fused Pallas slope-decode kernels vs the jnp recompute
+oracle) with their compiled temp-memory footprints.
 
     PYTHONPATH=src python benchmarks/bench_fused_mlp.py [--quick] [--out PATH]
 
@@ -33,9 +36,9 @@ from repro.kernels import fused, ops
 DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_fused_mlp.json"
 
 try:  # package-style (python -m benchmarks.run) or script-style invocation
-    from .common import emit, provenance, time_fn, write_bench_json
+    from .common import emit, provenance, temp_bytes, time_fn, write_bench_json
 except ImportError:
-    from common import emit, provenance, time_fn, write_bench_json
+    from common import emit, provenance, temp_bytes, time_fn, write_bench_json
 
 
 def make_mlp(mode: str, table):
@@ -116,6 +119,35 @@ def main(argv=None):
         }
         emit(f"glu_mlp_{mode}", us, f"{base / us:.2f}x_vs_exact")
 
+    # train-mode cells (ISSUE 9): a full grad step through the fused GLU
+    # under both backward implementations — "fused" decodes the PWL slope
+    # inside the Pallas backward kernel, "recompute" is the pure-jnp
+    # rematerialization oracle.  temp_bytes is XLA's compiled temp-buffer
+    # footprint for the grad step (backward working set).
+    def train_loss(impl_bwd):
+        def loss(x, wg, wu, wd):
+            y = fused.fused_glu(x, wg, wu, table=table, impl_bwd=impl_bwd) @ wd
+            return jnp.sum(y * y)
+        return loss
+
+    train = {}
+    g_fused = None
+    for impl_bwd in fused.IMPL_BWD_MODES:
+        gfn = jax.grad(train_loss(impl_bwd), argnums=(0, 1, 2, 3))
+        us = time_fn(jax.jit(gfn), x, wg, wu, wd,
+                     warmup=1 if args.quick else 2, iters=iters)
+        row = {"us_per_step": round(us, 2),
+               "temp_bytes": temp_bytes(gfn, x, wg, wu, wd)}
+        g = [a.astype(jnp.float32) for a in jax.jit(gfn)(x, wg, wu, wd)]
+        if g_fused is None:
+            g_fused = g
+        else:
+            row["grad_max_abs_diff_vs_fused"] = float(max(
+                jnp.max(jnp.abs(a - b)) for a, b in zip(g, g_fused)))
+        train[impl_bwd] = row
+        emit(f"glu_mlp_train_{impl_bwd}", us,
+             f"temp_bytes={row['temp_bytes']}")
+
     payload = {
         "benchmark": "fused_mlp",
         **provenance(args.quick),
@@ -124,6 +156,7 @@ def main(argv=None):
         "activation": args.activation,
         "breakpoints": args.breakpoints,
         "modes": results,
+        "train": train,
     }
     write_bench_json(args.out, payload)
 

@@ -14,7 +14,24 @@ import jax.numpy as jnp
 
 from repro.sfu.autotune.measure import provenance, time_fn  # noqa: F401
 
-__all__ = ["provenance", "time_fn", "write_bench_json", "emit", "sq_aae"]
+__all__ = ["provenance", "time_fn", "write_bench_json", "emit", "sq_aae",
+           "temp_bytes"]
+
+
+def temp_bytes(fn, *args):
+    """Temp-buffer bytes of ``jit(fn)`` compiled for ``args`` (None when the
+    backend lacks XLA memory analysis).  Used by the train-mode bench cells
+    to report backward-pass working-set footprints; ``tests/mem_utils.py``
+    is the test-side twin of this helper."""
+    import jax
+
+    compiled = jax.jit(fn).lower(*args).compile()
+    try:
+        stats = compiled.memory_analysis()
+    except NotImplementedError:
+        return None
+    size = getattr(stats, "temp_size_in_bytes", None)
+    return None if size is None else int(size)
 
 
 def write_bench_json(path, payload: dict) -> pathlib.Path:

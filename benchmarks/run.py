@@ -5,8 +5,10 @@
 Each benchmark prints CSV (`name,us_per_call,derived` or table-specific
 columns).  The fused_mlp benchmark additionally writes machine-readable
 results (per-mode latency + MSE vs exact) to `BENCH_fused_mlp.json` at the
-repo root so the perf trajectory is tracked across PRs.  The roofline
-benchmark reads experiments/dryrun/*.json (produced by
+repo root so the perf trajectory is tracked across PRs; fused_mlp and
+fused_attention also carry train-mode cells (grad-step latency + compiled
+temp-memory footprint under impl_bwd="fused" vs "recompute"), in quick mode
+too.  The roofline benchmark reads experiments/dryrun/*.json (produced by
 `python -m repro.launch.dryrun --all`).
 """
 from __future__ import annotations

@@ -27,6 +27,15 @@ the unfused math already performs (the MoE expert-parallel combine in
 replicated over mesh axes the specs don't mention, and shard_map's
 replication checker cannot see through a pallas_call anyway.
 
+Gradients differentiate straight through these wrappers: the fused ops are
+``jax.custom_vjp``s, so shard_map transposes them per-shard — the fused
+Pallas *backward* kernels (kernels/fused/backward.py) run on the same local
+blocks as the forward, and shard_map inserts the psums the transpose needs
+(e.g. for a replicated-in FSDP weight).  Pinned by
+tests/test_shard_fused.py::test_train_step_2x2_mesh_fused_backward_grad_parity
+(2x2 mesh, warnings-as-errors, parity vs the no-mesh step and the
+impl_bwd="recompute" oracle).
+
 Design doc: docs/distributed.md.
 """
 from __future__ import annotations

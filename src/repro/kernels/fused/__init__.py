@@ -21,6 +21,11 @@ kernel that produced the pre-activation.  This package provides:
               per split, softmax_split-style cross-split merge (serving
               decode hot path)
   norm      — fused RMSNorm (+ optional activation epilogue)
+  backward  — the ``impl_bwd`` selector for the custom VJPs: every fused
+              op above defaults to a fused Pallas backward kernel that
+              decodes the per-segment PWL *slope* in-kernel (the slope IS
+              the activation derivative); ``impl_bwd="recompute"`` keeps
+              the pure-jnp rematerialization as the grad-parity oracle
 
 Models opt in through their activation plan: sites compiled with
 ``ApproxSpec(impl="fused")`` — e.g. via the legacy knob
@@ -42,6 +47,12 @@ from .epilogue import (  # noqa: F401
     table_dtype_name,
 )
 from .attention import fused_flash_attention  # noqa: F401
+from .backward import (  # noqa: F401
+    IMPL_BWD_MODES,
+    current_impl_bwd,
+    resolve_impl_bwd,
+    use_impl_bwd,
+)
 from .decoding import merge_split_partials, paged_flash_decode  # noqa: F401
 from .glu import fused_glu  # noqa: F401
 from .linear import fused_linear  # noqa: F401

@@ -43,16 +43,29 @@ Structure (the classic flash tiling, cf. the dense kernel's row blocks):
   formulation it replaces — one resident pass instead of a scan of
   elementwise exp round-trips.
 
-The backward pass is a custom VJP with a pure-jnp *dense* recompute:
-scores are rematerialized with einsums and pushed through
-``pwl_softmax_reference`` (the same oracle the dense softmax kernel
-autodiffs through), matching the recompute discipline of ``fused/moe.py``.
-The recompute materializes the (B, G, Hkv, S, T) score tensor per layer —
-the same O(S*T) order the jnp flash path's backward pays (autodiff of its
-nested ``lax.scan`` stacks the per-block s/p/corr residuals across steps),
-so differentiated memory is no worse than the path this kernel replaces,
-but a truly blocked two-pass flash backward is the ROADMAP item that would
-cut both.
+The backward pass defaults to a blocked Pallas flash backward
+(``impl_bwd="fused"``) that never materializes a dense (S, T) score
+tensor: the forward saves only the final running row max ``m`` (which
+telescopes *exactly* to the dense row max — max is order-independent),
+and three passes over the same KV-innermost tiling recompute everything
+else per block.  Pass A rebuilds the dense normalizer ``l`` and the
+``delta = rowsum(dout * acc_o) / L`` correction from ``m`` (the forward's
+*chained* l carries O(table-error) from the PWL correction factors, so it
+is recomputed rather than saved — that is what lets the fused backward
+match the dense oracle to float roundoff).  Pass B accumulates dQ with
+the KV axis innermost; pass C accumulates dK/dV with the Q axis
+innermost.  Each pass decodes the per-segment PWL *slope* on the resident
+score tile (``fused/epilogue.pwl_value_and_slope_tile``) — the slope IS
+the activation derivative — and mirrors jnp's tie conventions for every
+clamp so the kernels reproduce ``jax.vjp`` of the dense oracle
+op-for-op.  Differentiated memory is O(S) per (head, q-row) in stats
+instead of the O(S*T) score tensor the old dense recompute materialized.
+
+``impl_bwd="recompute"`` keeps that pure-jnp dense recompute — einsum
+scores pushed through ``pwl_softmax_reference`` — as the oracle
+(``tests/test_fused_backward.py`` pins fused == recompute, and
+``tests/test_fused_backward.py::test_attention_bwd_memory_*`` pins the
+O(S*T) temp going away).
 
 Masked/padded rows (no valid key) return zeros, not NaN.  Clamps mirror
 ``fused/softmax.py``: masked fills use ``-1e30`` before the row max, and
@@ -73,6 +86,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.pwl import PWLTable
 
 from .._backend import should_interpret
+from .backward import resolve_impl_bwd
 from .epilogue import EpiloguePlan, plan_and_operands
 from .linear import _round_up
 from .softmax import _NEG_FILL, _SHIFT_CLAMP, pwl_softmax_reference
@@ -85,14 +99,17 @@ DEFAULT_BLOCK_KV = 512
 
 def _flash_kernel(*refs, plan: EpiloguePlan, nkv: int, scale: float,
                   kv_len: int, causal: bool, window, q_offset: int,
-                  has_valid: bool):
+                  has_valid: bool, save_stats: bool):
     n_tab = plan.n_operands
     q_ref, k_ref, v_ref = refs[0], refs[1], refs[2]
     off = 3 + (1 if has_valid else 0)
     vl_ref = refs[3] if has_valid else None
     tab_refs = refs[off: off + n_tab]
     o_ref = refs[off + n_tab]
-    m_ref, l_ref, acc_ref = refs[off + n_tab + 1: off + n_tab + 4]
+    off += n_tab + 1
+    ms_ref = refs[off] if save_stats else None
+    off += 1 if save_stats else 0
+    m_ref, l_ref, acc_ref = refs[off: off + 3]
 
     i = pl.program_id(1)
     j = pl.program_id(2)
@@ -162,15 +179,22 @@ def _flash_kernel(*refs, plan: EpiloguePlan, nkv: int, scale: float,
         o_ref[0] = (
             acc_ref[...] / jnp.maximum(l_ref[:, :1], jnp.float32(1e-30))
         ).astype(o_ref.dtype)
+        if save_stats:
+            # the final running max — bitwise equal to the dense row max
+            # (max telescopes exactly), the only residual the fused
+            # backward needs beyond the inputs
+            ms_ref[0] = m_ref[...]
 
 
 @functools.partial(jax.jit, static_argnames=(
     "plan", "g", "causal", "window", "q_offset", "block_q", "block_kv",
-    "interpret"))
+    "interpret", "save_stats"))
 def _fused_flash_4d(q, k, v, kv_valid_len, tables, *, plan, g, causal,
-                    window, q_offset, block_q, block_kv, interpret):
+                    window, q_offset, block_q, block_kv, interpret,
+                    save_stats=False):
     """q: (BHG, S, dh) f32;  k/v: (BH, T, dh) f32;
-    kv_valid_len: (BHG, 1) f32 or None.  Returns (BHG, S, dh) f32."""
+    kv_valid_len: (BHG, 1) f32 or None.  Returns (BHG, S, dh) f32, plus
+    the (BHG, Sp, 128) final-row-max stats when ``save_stats``."""
     BHG, S, dh = q.shape
     T = k.shape[1]
     bq = min(block_q, _round_up(S, 8))
@@ -197,16 +221,23 @@ def _fused_flash_4d(q, k, v, kv_valid_len, tables, *, plan, g, causal,
         in_specs.append(pl.BlockSpec((rows, cols), lambda b, i, j: (0, 0)))
     operands.extend(tables)
 
-    out = pl.pallas_call(
+    out_specs = [pl.BlockSpec((1, bq, dhp), lambda b, i, j: (b, i, 0))]
+    out_shape = [jax.ShapeDtypeStruct((BHG, Sp, dhp), jnp.float32)]
+    if save_stats:
+        out_specs.append(pl.BlockSpec((1, bq, 128), lambda b, i, j: (b, i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((BHG, Sp, 128), jnp.float32))
+
+    res = pl.pallas_call(
         functools.partial(
             _flash_kernel, plan=plan, nkv=nkv,
             scale=1.0 / math.sqrt(dh), kv_len=T, causal=causal,
             window=window, q_offset=q_offset, has_valid=has_valid,
+            save_stats=save_stats,
         ),
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, bq, dhp), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((BHG, Sp, dhp), jnp.float32),
+        out_specs=out_specs if save_stats else out_specs[0],
+        out_shape=out_shape if save_stats else out_shape[0],
         scratch_shapes=[
             pltpu.VMEM((bq, 128), jnp.float32),   # running row max
             pltpu.VMEM((bq, 128), jnp.float32),   # running row sum
@@ -214,7 +245,429 @@ def _fused_flash_4d(q, k, v, kv_valid_len, tables, *, plan, g, causal,
         ],
         interpret=interpret,
     )(*operands)
-    return out[:, :S, :dh]
+    if save_stats:
+        return res[0][:, :S, :dh], res[1]
+    return res[:, :S, :dh]
+
+
+# --- blocked flash backward (impl_bwd="fused") ------------------------------
+# Gradient of the DENSE oracle (_reference_attention), evaluated blockwise.
+# With m the saved row max (bitwise the dense max), the oracle per row i /
+# key j is
+#
+#     t_ij = where(keep, s_ij, -1e30) - m_i      s_ij = (q_i . k_j) * scale
+#     u_ij = max(pwl(max(t, CLAMP)), 0) * keep   l_i = sum_j u_ij
+#     y_ij = u_ij / L_i                          L_i = max(l_i, 1e-30)
+#     out_i = sum_j y_ij v_j
+#
+# and its VJP, with dp_ij = dout_i . v_j and delta_i = (dout_i . acc_o_i)/L:
+#
+#     du_ij = (dp_ij - gl_i * delta_i) / L_i
+#     dt_ij = du_ij * keep * gate_p * slope(t) * gate_t        (see softmax)
+#     dm_i  = -sum_j dt_ij            (every shifted score sees -m_i; for a
+#                                      true exp this telescopes to exactly 0
+#                                      — for a PWL exp it does NOT, so the
+#                                      usual flash stop-grad shortcut is
+#                                      wrong here; see softmax.py)
+#     ds_ij = (dt_ij + dm_i * eq_ij / ntie_i) * keep    (eq: argmax ties —
+#                                      jnp's max VJP splits dm equally)
+#     dq_i  = sum_j ds_ij k_j * scale      dk_j = sum_i ds_ij q_i * scale
+#     dv_j  = sum_i y_ij dout_i
+#
+# Four blocked passes, all on the forward's tiling with its block-skip
+# predicates (fully-masked tiles cost nothing), each O(S) in extra
+# residuals and none materializing a dense (S, T) tensor:
+#   A. (l, delta, ntie) per q row, from the saved max;
+#   B. dm per q row (needs delta/L from A before any dt exists);
+#   C. dq, KV innermost (needs the complete dm);
+#   D. dk/dv, Q innermost.
+
+
+def _bwd_keep_terms(q, k, mval, tab_refs, i, j, *, plan, scale, kv_len,
+                    causal, window, q_offset, vl_ref):
+    """Per-block recompute shared by the backward passes.
+
+    Returns (u, gate, eq, keepf) on the (bq, bkv) tile: u is the
+    unnormalized masked probability; gate is everything multiplying du to
+    make dt (mask, clamp gates with jnp's 0.5-at-tie convention, and the
+    PWL slope — the activation derivative, decoded from the same
+    delta-accumulation tables as the forward value); eq marks argmax ties
+    (masked scores equal the row max only when the whole row is masked,
+    and then dm is 0)."""
+    bq, bkv = q.shape[0], k.shape[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale
+    qpos = (i * bq + q_offset
+            + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0))
+    kpos = j * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    keep = kpos < kv_len
+    if causal:
+        keep &= kpos <= qpos
+    if window is not None:
+        keep &= (qpos - kpos) < window
+    if vl_ref is not None:
+        keep &= kpos.astype(jnp.float32) < vl_ref[0, 0]
+    keepf = keep.astype(jnp.float32)
+    s = jnp.where(keep, s, jnp.float32(_NEG_FILL))
+    eq = (s == mval).astype(jnp.float32)
+    t = s - mval
+    st = jnp.maximum(t, jnp.float32(_SHIFT_CLAMP))
+    p_raw, slope = plan.apply_value_and_slope(st, *tab_refs)
+    u = jnp.maximum(p_raw, 0.0) * keepf
+    gate = (
+        keepf
+        * ((p_raw > 0.0).astype(jnp.float32) + 0.5 * (p_raw == 0.0))
+        * slope
+        * ((t > _SHIFT_CLAMP).astype(jnp.float32) + 0.5 * (t == _SHIFT_CLAMP))
+    )
+    return u, gate, eq, keepf
+
+
+def _bwd_du(dp, lval, dval):
+    """du = (dp - gl*delta)/L with jnp's gate for max(l, 1e-30)."""
+    L = jnp.maximum(lval, jnp.float32(1e-30))
+    gl = (lval > 1e-30).astype(jnp.float32) + 0.5 * (lval == 1e-30)
+    return (dp - gl * dval) / L, L
+
+
+def _flash_bwd_stats_kernel(*refs, plan: EpiloguePlan, nkv: int, scale: float,
+                            kv_len: int, causal: bool, window, q_offset: int,
+                            has_valid: bool):
+    n_tab = plan.n_operands
+    q_ref, k_ref, v_ref, do_ref = refs[0], refs[1], refs[2], refs[3]
+    off = 4 + (1 if has_valid else 0)
+    vl_ref = refs[4] if has_valid else None
+    m_in_ref = refs[off]
+    tab_refs = refs[off + 1: off + 1 + n_tab]
+    l_ref, d_ref, n_ref = refs[off + 1 + n_tab: off + 4 + n_tab]
+    accl_ref, acco_ref, accn_ref = refs[off + 4 + n_tab: off + 7 + n_tab]
+
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    bq, bkv = q_ref.shape[1], k_ref.shape[1]
+
+    @pl.when(j == 0)
+    def _():
+        accl_ref[...] = jnp.zeros_like(accl_ref)
+        acco_ref[...] = jnp.zeros_like(acco_ref)
+        accn_ref[...] = jnp.zeros_like(accn_ref)
+
+    should_run = jnp.bool_(True)
+    if causal:
+        should_run &= j * bkv <= (i + 1) * bq - 1 + q_offset
+    if window is not None:
+        should_run &= i * bq + q_offset - (j * bkv + bkv - 1) < window
+    if has_valid:
+        should_run &= j * bkv < vl_ref[0, 0]
+
+    @pl.when(should_run)
+    def _():
+        u, _, eq, _ = _bwd_keep_terms(
+            q_ref[0], k_ref[0], m_in_ref[0][:, :1], tab_refs, i, j,
+            plan=plan, scale=scale, kv_len=kv_len, causal=causal,
+            window=window, q_offset=q_offset, vl_ref=vl_ref,
+        )
+        accl_ref[...] += jnp.broadcast_to(
+            jnp.sum(u, axis=-1, keepdims=True), accl_ref.shape
+        )
+        acco_ref[...] += jnp.dot(
+            u, v_ref[0], preferred_element_type=jnp.float32
+        )
+        accn_ref[...] += jnp.broadcast_to(
+            jnp.sum(eq, axis=-1, keepdims=True), accn_ref.shape
+        )
+
+    @pl.when(j == nkv - 1)
+    def _():
+        l = accl_ref[:, :1]
+        L = jnp.maximum(l, jnp.float32(1e-30))
+        delta = jnp.sum(
+            do_ref[0] * acco_ref[...], axis=-1, keepdims=True
+        ) / L
+        l_ref[0] = accl_ref[...]
+        d_ref[0] = jnp.broadcast_to(delta, d_ref.shape[1:])
+        # every row attains its max somewhere, but rows whose every KV
+        # block was SKIPPED never accumulate a tie — clamp to 1 so the
+        # eq/ntie split divides by a nonzero count (dm is 0 there anyway)
+        n_ref[0] = jnp.maximum(accn_ref[...], 1.0)
+
+
+def _flash_bwd_dm_kernel(*refs, plan: EpiloguePlan, nkv: int, scale: float,
+                         kv_len: int, causal: bool, window, q_offset: int,
+                         has_valid: bool):
+    n_tab = plan.n_operands
+    q_ref, k_ref, v_ref, do_ref = refs[0], refs[1], refs[2], refs[3]
+    off = 4 + (1 if has_valid else 0)
+    vl_ref = refs[4] if has_valid else None
+    m_in_ref, l_in_ref, d_in_ref = refs[off], refs[off + 1], refs[off + 2]
+    tab_refs = refs[off + 3: off + 3 + n_tab]
+    dm_ref = refs[off + 3 + n_tab]
+    acc_ref = refs[off + 4 + n_tab]
+
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    bq, bkv = q_ref.shape[1], k_ref.shape[1]
+
+    @pl.when(j == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    should_run = jnp.bool_(True)
+    if causal:
+        should_run &= j * bkv <= (i + 1) * bq - 1 + q_offset
+    if window is not None:
+        should_run &= i * bq + q_offset - (j * bkv + bkv - 1) < window
+    if has_valid:
+        should_run &= j * bkv < vl_ref[0, 0]
+
+    @pl.when(should_run)
+    def _():
+        _, gate, _, _ = _bwd_keep_terms(
+            q_ref[0], k_ref[0], m_in_ref[0][:, :1], tab_refs, i, j,
+            plan=plan, scale=scale, kv_len=kv_len, causal=causal,
+            window=window, q_offset=q_offset, vl_ref=vl_ref,
+        )
+        dp = jax.lax.dot_general(
+            do_ref[0], v_ref[0], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        du, _ = _bwd_du(dp, l_in_ref[0][:, :1], d_in_ref[0][:, :1])
+        acc_ref[...] += jnp.broadcast_to(
+            -jnp.sum(du * gate, axis=-1, keepdims=True), acc_ref.shape
+        )
+
+    @pl.when(j == nkv - 1)
+    def _():
+        dm_ref[0] = acc_ref[...]
+
+
+def _flash_bwd_dq_kernel(*refs, plan: EpiloguePlan, nkv: int, scale: float,
+                         kv_len: int, causal: bool, window, q_offset: int,
+                         has_valid: bool):
+    n_tab = plan.n_operands
+    q_ref, k_ref, v_ref, do_ref = refs[0], refs[1], refs[2], refs[3]
+    off = 4 + (1 if has_valid else 0)
+    vl_ref = refs[4] if has_valid else None
+    m_in_ref, l_in_ref, d_in_ref, n_in_ref, dm_in_ref = refs[off: off + 5]
+    tab_refs = refs[off + 5: off + 5 + n_tab]
+    dq_ref = refs[off + 5 + n_tab]
+    acc_ref = refs[off + 6 + n_tab]
+
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    bq, bkv = q_ref.shape[1], k_ref.shape[1]
+
+    @pl.when(j == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    should_run = jnp.bool_(True)
+    if causal:
+        should_run &= j * bkv <= (i + 1) * bq - 1 + q_offset
+    if window is not None:
+        should_run &= i * bq + q_offset - (j * bkv + bkv - 1) < window
+    if has_valid:
+        should_run &= j * bkv < vl_ref[0, 0]
+
+    @pl.when(should_run)
+    def _():
+        _, gate, eq, keepf = _bwd_keep_terms(
+            q_ref[0], k_ref[0], m_in_ref[0][:, :1], tab_refs, i, j,
+            plan=plan, scale=scale, kv_len=kv_len, causal=causal,
+            window=window, q_offset=q_offset, vl_ref=vl_ref,
+        )
+        dp = jax.lax.dot_general(
+            do_ref[0], v_ref[0], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        du, _ = _bwd_du(dp, l_in_ref[0][:, :1], d_in_ref[0][:, :1])
+        dt = du * gate
+        dmv = dm_in_ref[0][:, :1]
+        ntie = n_in_ref[0][:, :1]
+        ds = (dt + dmv * eq / ntie) * keepf * scale
+        acc_ref[...] += jnp.dot(
+            ds, k_ref[0], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(j == nkv - 1)
+    def _():
+        dq_ref[0] = acc_ref[...]
+
+
+def _flash_bwd_dkv_kernel(*refs, plan: EpiloguePlan, nq: int, scale: float,
+                          kv_len: int, causal: bool, window, q_offset: int,
+                          has_valid: bool):
+    n_tab = plan.n_operands
+    q_ref, k_ref, v_ref, do_ref = refs[0], refs[1], refs[2], refs[3]
+    off = 4 + (1 if has_valid else 0)
+    vl_ref = refs[4] if has_valid else None
+    m_in_ref, l_in_ref, d_in_ref, n_in_ref, dm_in_ref = refs[off: off + 5]
+    tab_refs = refs[off + 5: off + 5 + n_tab]
+    dk_ref, dv_ref = refs[off + 5 + n_tab], refs[off + 6 + n_tab]
+    dk_acc_ref, dv_acc_ref = refs[off + 7 + n_tab], refs[off + 8 + n_tab]
+
+    j = pl.program_id(1)  # KV block — outer; scratch persists across i
+    i = pl.program_id(2)  # Q block — innermost
+    bq, bkv = q_ref.shape[1], k_ref.shape[1]
+
+    @pl.when(i == 0)
+    def _():
+        dk_acc_ref[...] = jnp.zeros_like(dk_acc_ref)
+        dv_acc_ref[...] = jnp.zeros_like(dv_acc_ref)
+
+    should_run = jnp.bool_(True)
+    if causal:
+        should_run &= j * bkv <= (i + 1) * bq - 1 + q_offset
+    if window is not None:
+        should_run &= i * bq + q_offset - (j * bkv + bkv - 1) < window
+    if has_valid:
+        should_run &= j * bkv < vl_ref[0, 0]
+
+    @pl.when(should_run)
+    def _():
+        u, gate, eq, keepf = _bwd_keep_terms(
+            q_ref[0], k_ref[0], m_in_ref[0][:, :1], tab_refs, i, j,
+            plan=plan, scale=scale, kv_len=kv_len, causal=causal,
+            window=window, q_offset=q_offset, vl_ref=vl_ref,
+        )
+        dp = jax.lax.dot_general(
+            do_ref[0], v_ref[0], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        du, L = _bwd_du(dp, l_in_ref[0][:, :1], d_in_ref[0][:, :1])
+        dt = du * gate
+        ds = (dt + dm_in_ref[0][:, :1] * eq / n_in_ref[0][:, :1]) \
+            * keepf * scale
+        # (bq, bkv)^T contractions: contract the q axis of both operands
+        dk_acc_ref[...] += jax.lax.dot_general(
+            ds, q_ref[0], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        dv_acc_ref[...] += jax.lax.dot_general(
+            u / L, do_ref[0], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(i == nq - 1)
+    def _():
+        dk_ref[0] = dk_acc_ref[...]
+        dv_ref[0] = dv_acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "plan", "g", "causal", "window", "q_offset", "block_q", "block_kv",
+    "interpret"))
+def _flash_bwd_4d(q, k, v, kv_valid_len, dout, m, tables, *, plan, g,
+                  causal, window, q_offset, block_q, block_kv, interpret):
+    """Blocked flash backward on the folded layouts.
+
+    q/dout: (BHG, S, dh);  k/v: (BH, T, dh);  m: (BHG, Sp, 128) saved
+    stats.  Returns (dq (BHG, S, dh), dk (BHG, T, dh), dv (BHG, T, dh))
+    f32 — dk/dv are per *query* head; the caller sums the G group axis.
+    """
+    BHG, S, dh = q.shape
+    T = k.shape[1]
+    bq = min(block_q, _round_up(S, 8))
+    bkv = min(block_kv, _round_up(T, 128))
+    dhp = _round_up(dh, 128)
+    qp = jnp.pad(q, ((0, 0), (0, _round_up(S, bq) - S), (0, dhp - dh)))
+    kp = jnp.pad(k, ((0, 0), (0, _round_up(T, bkv) - T), (0, dhp - dh)))
+    vp = jnp.pad(v, ((0, 0), (0, _round_up(T, bkv) - T), (0, dhp - dh)))
+    dop = jnp.pad(dout, ((0, 0), (0, _round_up(S, bq) - S), (0, dhp - dh)))
+    Sp, Tp = qp.shape[1], kp.shape[1]
+    nq, nkv = Sp // bq, Tp // bkv
+    scale = 1.0 / math.sqrt(dh)
+    has_valid = kv_valid_len is not None
+
+    def specs(order):
+        """Operand block specs; ``order`` maps grid ids -> (b, i, j)."""
+        sp = [
+            pl.BlockSpec((1, bq, dhp), lambda *a: order(*a)[:2] + (0,)),
+            pl.BlockSpec(
+                (1, bkv, dhp),
+                lambda *a, _g=g: (order(*a)[0] // _g, order(*a)[2], 0),
+            ),
+            pl.BlockSpec(
+                (1, bkv, dhp),
+                lambda *a, _g=g: (order(*a)[0] // _g, order(*a)[2], 0),
+            ),
+            pl.BlockSpec((1, bq, dhp), lambda *a: order(*a)[:2] + (0,)),
+        ]
+        if has_valid:
+            sp.append(pl.BlockSpec((1, 1), lambda *a: (order(*a)[0], 0)))
+        return sp
+
+    def stats_spec(order):
+        return pl.BlockSpec((1, bq, 128), lambda *a: order(*a)[:2] + (0,))
+
+    def table_specs():
+        return [pl.BlockSpec((rows, cols), lambda *a: (0, 0))
+                for rows, cols in plan.table_specs()]
+
+    kv_inner = lambda b, i, j: (b, i, j)   # noqa: E731 — grid (B, nq, nkv)
+    q_inner = lambda b, j, i: (b, i, j)    # noqa: E731 — grid (B, nkv, nq)
+
+    base_ops = [qp, kp, vp, dop] + ([kv_valid_len] if has_valid else [])
+    kw = dict(plan=plan, scale=scale, kv_len=T, causal=causal,
+              window=window, q_offset=q_offset, has_valid=has_valid)
+
+    # pass A: dense normalizer l, delta, and argmax tie count per q row,
+    # all recomputed from the saved max
+    l, delta, ntie = pl.pallas_call(
+        functools.partial(_flash_bwd_stats_kernel, nkv=nkv, **kw),
+        grid=(BHG, nq, nkv),
+        in_specs=specs(kv_inner) + [stats_spec(kv_inner)] + table_specs(),
+        out_specs=[stats_spec(kv_inner)] * 3,
+        out_shape=[jax.ShapeDtypeStruct((BHG, Sp, 128), jnp.float32)] * 3,
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, dhp), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*base_ops, m, *tables)
+
+    # pass B: the row-max gradient dm = -sum_j dt (needs pass A's l/delta
+    # before any dt exists, and must be complete before dq/dk consume it)
+    dm = pl.pallas_call(
+        functools.partial(_flash_bwd_dm_kernel, nkv=nkv, **kw),
+        grid=(BHG, nq, nkv),
+        in_specs=specs(kv_inner) + [stats_spec(kv_inner)] * 3
+        + table_specs(),
+        out_specs=stats_spec(kv_inner),
+        out_shape=jax.ShapeDtypeStruct((BHG, Sp, 128), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bq, 128), jnp.float32)],
+        interpret=interpret,
+    )(*base_ops, m, l, delta, *tables)
+
+    # pass C: dq, KV innermost (accumulate over key blocks per q tile)
+    dq = pl.pallas_call(
+        functools.partial(_flash_bwd_dq_kernel, nkv=nkv, **kw),
+        grid=(BHG, nq, nkv),
+        in_specs=specs(kv_inner) + [stats_spec(kv_inner)] * 5
+        + table_specs(),
+        out_specs=pl.BlockSpec((1, bq, dhp), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BHG, Sp, dhp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bq, dhp), jnp.float32)],
+        interpret=interpret,
+    )(*base_ops, m, l, delta, ntie, dm, *tables)
+
+    # pass D: dk/dv, Q innermost (accumulate over query blocks per kv tile)
+    dk, dv = pl.pallas_call(
+        functools.partial(_flash_bwd_dkv_kernel, nq=nq, **kw),
+        grid=(BHG, nkv, nq),
+        in_specs=specs(q_inner) + [stats_spec(q_inner)] * 5 + table_specs(),
+        out_specs=[pl.BlockSpec((1, bkv, dhp), lambda b, j, i: (b, j, 0))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((BHG, Tp, dhp), jnp.float32)] * 2,
+        scratch_shapes=[
+            pltpu.VMEM((bkv, dhp), jnp.float32),
+            pltpu.VMEM((bkv, dhp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*base_ops, m, l, delta, ntie, dm, *tables)
+
+    return dq[:, :S, :dh], dk[:, :T, :dh], dv[:, :T, :dh]
 
 
 def _attention_mask(S, T, causal, window, q_offset, kv_valid_len, B, Hkv, G):
@@ -255,17 +708,25 @@ def _reference_attention(q, k, v, kv_valid_len, tables, plan, causal, window,
     return out.transpose(0, 3, 2, 1, 4).reshape(B, S, H, dh)
 
 
-# --- autodiff: fused forward, pure-jnp dense recompute backward ------------
+# --- autodiff: fused forward, fused (or jnp dense-recompute) backward ------
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9, 10, 11))
-def _attn_op(q, k, v, kv_valid_len, tables, plan, causal, window, q_offset,
-             block_q, block_kv, interpret):
+def _fold_q_heads(x, B, S, Hkv, G, dh):
+    """(B, S, H, dh) -> (B*Hkv*G, S, dh), Hkv major / G minor."""
+    return (x.astype(jnp.float32).reshape(B, S, Hkv, G, dh)
+            .transpose(0, 2, 3, 1, 4).reshape(B * Hkv * G, S, dh))
+
+
+def _unfold_q_heads(x, B, S, Hkv, G, dh):
+    return (x.reshape(B, Hkv, G, S, dh).transpose(0, 3, 1, 2, 4)
+            .reshape(B, S, Hkv * G, dh))
+
+
+def _fold_operands(q, k, v, kv_valid_len):
     B, S, H, dh = q.shape
     T, Hkv = k.shape[1], k.shape[2]
     G = H // Hkv
-    qf = (q.astype(jnp.float32).reshape(B, S, Hkv, G, dh)
-          .transpose(0, 2, 3, 1, 4).reshape(B * Hkv * G, S, dh))
+    qf = _fold_q_heads(q, B, S, Hkv, G, dh)
     kf = (k.astype(jnp.float32).transpose(0, 2, 1, 3)
           .reshape(B * Hkv, T, dh))
     vf = (v.astype(jnp.float32).transpose(0, 2, 1, 3)
@@ -275,32 +736,69 @@ def _attn_op(q, k, v, kv_valid_len, tables, plan, causal, window, q_offset,
         vl = jnp.broadcast_to(
             kv_valid_len.astype(jnp.float32)[:, None, None], (B, Hkv * G, 1)
         ).reshape(B * Hkv * G, 1)
-    out = _fused_flash_4d(
+    return qf, kf, vf, vl, G
+
+
+def _attn_fwd_impl(q, k, v, kv_valid_len, tables, plan, causal, window,
+                   q_offset, block_q, block_kv, interpret, save_stats):
+    B, S, H, dh = q.shape
+    Hkv = k.shape[2]
+    qf, kf, vf, vl, G = _fold_operands(q, k, v, kv_valid_len)
+    res = _fused_flash_4d(
         qf, kf, vf, vl, tables, plan=plan, g=G, causal=causal, window=window,
         q_offset=q_offset, block_q=block_q, block_kv=block_kv,
-        interpret=interpret,
+        interpret=interpret, save_stats=save_stats,
     )
-    return (out.reshape(B, Hkv, G, S, dh).transpose(0, 3, 1, 2, 4)
-            .reshape(B, S, H, dh))
+    out, m = res if save_stats else (res, None)
+    return _unfold_q_heads(out, B, S, Hkv, G, dh), m
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9, 10, 11,
+                                                    12))
+def _attn_op(q, k, v, kv_valid_len, tables, plan, causal, window, q_offset,
+             block_q, block_kv, interpret, impl_bwd):
+    return _attn_fwd_impl(q, k, v, kv_valid_len, tables, plan, causal,
+                          window, q_offset, block_q, block_kv, interpret,
+                          False)[0]
 
 
 def _attn_op_fwd(q, k, v, kv_valid_len, tables, plan, causal, window,
-                 q_offset, block_q, block_kv, interpret):
-    y = _attn_op(q, k, v, kv_valid_len, tables, plan, causal, window,
-                 q_offset, block_q, block_kv, interpret)
-    return y, (q, k, v, kv_valid_len, tables)
+                 q_offset, block_q, block_kv, interpret, impl_bwd):
+    # fused backward: the forward additionally emits the running-max stats
+    # (an O(S)-per-row residual); same kernel math, same primal output
+    y, m = _attn_fwd_impl(q, k, v, kv_valid_len, tables, plan, causal,
+                          window, q_offset, block_q, block_kv, interpret,
+                          impl_bwd == "fused")
+    return y, (q, k, v, kv_valid_len, tables, m)
 
 
 def _attn_op_bwd(plan, causal, window, q_offset, block_q, block_kv,
-                 interpret, res, g):
-    q, k, v, kv_valid_len, tables = res
-    _, vjp = jax.vjp(
-        lambda qq, kk, vv: _reference_attention(
-            qq, kk, vv, kv_valid_len, tables, plan, causal, window, q_offset
-        ),
-        q, k, v,
-    )
-    dq, dk, dv = vjp(g.astype(jnp.float32))
+                 interpret, impl_bwd, res, g):
+    q, k, v, kv_valid_len, tables, m = res
+    if impl_bwd == "fused":
+        B, S, H, dh = q.shape
+        T, Hkv = k.shape[1], k.shape[2]
+        qf, kf, vf, vl, G = _fold_operands(q, k, v, kv_valid_len)
+        gf = _fold_q_heads(g, B, S, Hkv, G, dh)
+        dq4, dk4, dv4 = _flash_bwd_4d(
+            qf, kf, vf, vl, gf, m, tables, plan=plan, g=G, causal=causal,
+            window=window, q_offset=q_offset, block_q=block_q,
+            block_kv=block_kv, interpret=interpret,
+        )
+        dq = _unfold_q_heads(dq4, B, S, Hkv, G, dh)
+        # dk/dv come back per query head: sum the G grouped queries that
+        # shared each KV head's tiles
+        dk = (dk4.reshape(B, Hkv, G, T, dh).sum(2).transpose(0, 2, 1, 3))
+        dv = (dv4.reshape(B, Hkv, G, T, dh).sum(2).transpose(0, 2, 1, 3))
+    else:
+        _, vjp = jax.vjp(
+            lambda qq, kk, vv: _reference_attention(
+                qq, kk, vv, kv_valid_len, tables, plan, causal, window,
+                q_offset
+            ),
+            q, k, v,
+        )
+        dq, dk, dv = vjp(g.astype(jnp.float32))
     dtables = jax.tree_util.tree_map(jnp.zeros_like, tables)
     # kv_valid_len reaches the op as f32 (public wrapper casts) or None
     dvl = None if kv_valid_len is None else jnp.zeros_like(kv_valid_len)
@@ -325,6 +823,7 @@ def fused_flash_attention(
     block_q: int = DEFAULT_BLOCK_Q,
     block_kv: int = DEFAULT_BLOCK_KV,
     interpret: bool | None = None,
+    impl_bwd: str | None = None,
 ) -> jax.Array:
     """Flash attention with the online-softmax exp through the PWL decode.
 
@@ -337,6 +836,9 @@ def fused_flash_attention(
     kv_valid_len: per-batch count of valid KV prefix positions (ragged
            decode caches — validity must be a prefix, which ring and linear
            caches in this codebase guarantee).
+    impl_bwd: backward implementation as in :func:`fused_linear` —
+           "fused" (blocked flash backward, no dense score tensor; the
+           default) or "recompute" (pure-jnp dense oracle).
 
     GQA: ``H`` must be a multiple of ``Hkv``; grouped queries share their
     KV head's tiles.  Returns (B, S, H, dh) in ``q.dtype``.
@@ -349,5 +851,6 @@ def fused_flash_attention(
     if kv_valid_len is not None:
         kv_valid_len = kv_valid_len.astype(jnp.float32)
     y = _attn_op(q, k, v, kv_valid_len, tables, plan, causal, window,
-                 int(q_offset), block_q, block_kv, interpret)
+                 int(q_offset), block_q, block_kv, interpret,
+                 resolve_impl_bwd(impl_bwd))
     return y.astype(q.dtype)

@@ -1,0 +1,60 @@
+"""Backward-implementation selector for the fused kernels.
+
+Every fused op carries a custom VJP with two interchangeable backward
+implementations:
+
+* ``"fused"`` (the default) — Pallas backward kernels: the pre-activation is
+  rematerialized *blockwise inside the kernel* and the PWL per-segment slope
+  (the activation's exact local derivative — the Flex-SFU table drives both
+  passes) is decoded on the resident tile, so ``dL/dz = g * m_seg(z)`` never
+  round-trips HBM and flash attention never materializes dense scores.
+* ``"recompute"`` — the original pure-jnp rematerialization.  Kept as the
+  *oracle*: it is plain jnp autodiff-compatible math that the property suite
+  (tests/test_fused_backward.py) compares the fused kernels against, and the
+  escape hatch if a backward kernel misbehaves on a new backend.
+
+Selection is per-call (``impl_bwd=`` on every public fused op) with a
+process-wide default that :func:`use_impl_bwd` overrides for a scope — the
+context-manager form is what benchmarks and tests use to drive whole model
+paths through one implementation without threading a parameter through every
+layer.  The mode is a static (nondiff) argument of each op's custom VJP, so
+switching modes retraces but never recompiles the forward kernel itself.
+"""
+from __future__ import annotations
+
+import contextlib
+
+IMPL_BWD_MODES = ("fused", "recompute")
+
+_default_impl_bwd = "fused"
+
+
+def _validate(mode: str) -> str:
+    if mode not in IMPL_BWD_MODES:
+        raise ValueError(
+            f"impl_bwd must be one of {IMPL_BWD_MODES}, got {mode!r}"
+        )
+    return mode
+
+
+def current_impl_bwd() -> str:
+    """The process-wide default backward implementation."""
+    return _default_impl_bwd
+
+
+def resolve_impl_bwd(override: str | None) -> str:
+    """Resolve a per-call ``impl_bwd=`` argument against the default."""
+    if override is None:
+        return _default_impl_bwd
+    return _validate(override)
+
+
+@contextlib.contextmanager
+def use_impl_bwd(mode: str):
+    """Scope the default backward implementation (``"fused"|"recompute"``)."""
+    global _default_impl_bwd
+    prev, _default_impl_bwd = _default_impl_bwd, _validate(mode)
+    try:
+        yield
+    finally:
+        _default_impl_bwd = prev

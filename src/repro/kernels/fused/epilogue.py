@@ -50,6 +50,17 @@ def pwl_value_and_slope_tile(x, bp_ref, dmq_ref, n_bp: int):
     the whole decode is n_bp full-rate VPU compares + 2 FMAs each — no
     gather, no per-lane divergence, and O(x.size) temporaries (never an
     (..., n_bp) one-hot).  Works on kernel refs and plain jnp arrays alike.
+
+    Breakpoint-boundary convention: the compare is STRICT (``x > bp_i``), so
+    an input landing *exactly* on breakpoint ``bp_i`` accumulates no delta
+    for it — the LEFT segment (the one ending at ``bp_i``) owns the
+    boundary, for both the value and the returned slope.  This matches
+    ``core.pwl.eval_coeff`` (``idx = sum(x > bp)``), and because this one
+    function is the decode for the fused kernels, the Pallas backward
+    kernels, AND the jnp recompute oracle (:func:`plan_value_and_slope`),
+    the derivative at a breakpoint is bitwise-identical everywhere — for
+    every table format, including the int8 full-space grid (pinned by
+    tests/test_fused_backward.py).
     """
     xf = x.astype(jnp.float32)
     native = jnp.dtype(dmq_ref.dtype) != jnp.dtype(jnp.float32)
@@ -72,9 +83,17 @@ def pwl_value_and_slope_tile(x, bp_ref, dmq_ref, n_bp: int):
     return m * xf + q, m
 
 
-def pwl_eval_tile(x, bp_ref, dmq_ref, n_bp: int):
-    """PWL value only (see :func:`pwl_value_and_slope_tile`)."""
-    return pwl_value_and_slope_tile(x, bp_ref, dmq_ref, n_bp)[0]
+def pwl_eval_tile(x, bp_ref, dmq_ref, n_bp: int, derivative: bool = False):
+    """PWL value — or, with ``derivative=True``, the per-segment slope.
+
+    The slope ``m(x)`` is the activation's *exact* local derivative (the
+    Flex-SFU backward-pass hook: the same non-uniform table drives both
+    passes), decoded by the same delta accumulation as the value, under the
+    same boundary convention (exactly on a breakpoint -> the left segment's
+    slope; see :func:`pwl_value_and_slope_tile`).
+    """
+    value, slope = pwl_value_and_slope_tile(x, bp_ref, dmq_ref, n_bp)
+    return slope if derivative else value
 
 
 def table_dtype_name(table: PWLTable) -> str:
@@ -180,30 +199,45 @@ class EpiloguePlan:
             return fn(x.astype(jnp.float32))
         raise ValueError(f"unknown epilogue kind '{self.kind}'")
 
+    def apply_value_and_slope(self, x, *table_refs):
+        """(act(x), act'(x)) on a tile, f32 — the backward-kernel epilogue.
+
+        For the PWL plan the derivative is the decoded per-segment slope
+        (one extra FMA chain over :meth:`apply`, no extra table reads); for
+        exact plans it is ``jax.vjp`` of the elementwise function, traced
+        inside the kernel body.  Usable on kernel refs and jnp arrays alike
+        — :func:`plan_value_and_slope` (the jnp recompute oracle) is this
+        same method, so the fused and recompute backwards share one decode.
+        """
+        xf = x.astype(jnp.float32)
+        if self.kind == "identity":
+            return xf, jnp.ones_like(xf)
+        if self.kind == "pwl":
+            bp_ref, dmq_ref = table_refs
+            return pwl_value_and_slope_tile(xf, bp_ref, dmq_ref, self.n_bp)
+        if self.kind.startswith("exact:"):
+            fn = F.get(self.kind.split(":", 1)[1]).fn
+            a, vjp = jax.vjp(fn, xf)
+            return a, vjp(jnp.ones_like(a))[0]
+        raise ValueError(f"unknown epilogue kind '{self.kind}'")
+
 
 IDENTITY = EpiloguePlan("identity")
 
 
 def plan_value_and_slope(plan: EpiloguePlan, tables, z):
-    """jnp-level (act(z), act'(z)) for a plan — the VJP recompute path.
+    """jnp-level (act(z), act'(z)) for a plan — the VJP recompute oracle.
 
-    Used by the custom backward passes of the fused kernels: the forward
-    runs fused in Pallas, the backward rematerializes the pre-activation and
-    needs the activation value and its elementwise derivative.  For the PWL
-    plan the derivative is exactly the per-segment slope m(z) (a.e., ignoring
-    the breakpoint null set — identical to autodiff of ``eval_coeff``).
+    Used by the ``impl_bwd="recompute"`` backward passes of the fused
+    kernels: the backward rematerializes the pre-activation in jnp and needs
+    the activation value and its elementwise derivative.  For the PWL plan
+    the derivative is exactly the per-segment slope m(z) (a.e.; exactly ON a
+    breakpoint the left segment's slope wins — see
+    :func:`pwl_value_and_slope_tile`, which this function IS, so the fused
+    backward kernels and this oracle agree bitwise at the boundary,
+    identical to autodiff of ``eval_coeff``).
     """
-    zf = z.astype(jnp.float32)
-    if plan.kind == "identity":
-        return zf, jnp.ones_like(zf)
-    if plan.kind == "pwl":
-        bp, dmq = tables  # (n, 1), (n+1, 2)
-        return pwl_value_and_slope_tile(zf, bp, dmq, plan.n_bp)
-    if plan.kind.startswith("exact:"):
-        fn = F.get(plan.kind.split(":", 1)[1]).fn
-        a, vjp = jax.vjp(fn, zf)
-        return a, vjp(jnp.ones_like(zf))[0]  # elementwise fn -> derivative
-    raise ValueError(f"unknown epilogue kind '{plan.kind}'")
+    return plan.apply_value_and_slope(z, *tables)
 
 
 def exact_plan(name: str) -> EpiloguePlan:

@@ -22,6 +22,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.pwl import PWLTable
 
 from .._backend import should_interpret
+from .backward import resolve_impl_bwd
 from .epilogue import EpiloguePlan, plan_and_operands, plan_value_and_slope
 from .linear import DEFAULT_BLOCK, _aligned_block, _pad_to
 
@@ -85,29 +86,102 @@ def _fused_glu_2d(x, wg, wu, tables, *, plan, block, interpret):
     return out[:M, :N]
 
 
-# --- autodiff: fused forward, pure-jnp recompute backward ------------------
-# (see fused/linear.py for the rationale)
+# --- autodiff: fused forward, fused (or jnp-recompute) backward ------------
+# (see fused/linear.py for the rationale)  The GLU chain rule needs BOTH
+# epilogue outputs — dzg = g * zu * act'(zg) and dzu = g * act(zg) — so the
+# backward kernel recomputes the two accumulators exactly like the forward
+# and emits (dzg, dzu) from one value-and-slope decode (the slope costs one
+# extra FMA chain over the forward's value decode, zero extra table reads).
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
-def _glu_op(x, wg, wu, tables, plan, block, interpret):
+def _glu_bwd_kernel(*refs, plan: EpiloguePlan, nk: int):
+    n_tab = plan.n_operands
+    x_ref, wg_ref, wu_ref, g_ref = refs[0], refs[1], refs[2], refs[3]
+    tab_refs = refs[4 : 4 + n_tab]
+    dzg_ref, dzu_ref = refs[4 + n_tab], refs[5 + n_tab]
+    accg_ref, accu_ref = refs[6 + n_tab], refs[7 + n_tab]
+
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        accg_ref[...] = jnp.zeros_like(accg_ref)
+        accu_ref[...] = jnp.zeros_like(accu_ref)
+
+    x = x_ref[...]
+    accg_ref[...] += jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+    accu_ref[...] += jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _():
+        act_zg, slope = plan.apply_value_and_slope(accg_ref[...], *tab_refs)
+        gf = g_ref[...].astype(jnp.float32)
+        dzg_ref[...] = gf * accu_ref[...] * slope
+        dzu_ref[...] = gf * act_zg
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "block", "interpret"))
+def _glu_dz_2d(x, wg, wu, g, tables, *, plan, block, interpret):
+    """(dzg, dzu) of the GLU in one Pallas pass; each (M, N) f32."""
+    M, K = x.shape
+    N = wg.shape[1]
+    bm, bn, bk = _aligned_block(block, (M, N, K), x.dtype)
+    xp = _pad_to(x, (bm, bk))
+    wgp = _pad_to(wg, (bk, bn))
+    wup = _pad_to(wu, (bk, bn))
+    gp = _pad_to(g.astype(jnp.float32), (bm, bn))
+    Mp, Kp = xp.shape
+    Np = wgp.shape[1]
+    nk = Kp // bk
+    grid = (Mp // bm, Np // bn, nk)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+    ]
+    for rows, cols in plan.table_specs():
+        in_specs.append(pl.BlockSpec((rows, cols), lambda i, j, k: (0, 0)))
+
+    dzg, dzu = pl.pallas_call(
+        functools.partial(_glu_bwd_kernel, plan=plan, nk=nk),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((Mp, Np), jnp.float32)] * 2,
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, bn), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, wgp, wup, gp, *tables)
+    return dzg[:M, :N], dzu[:M, :N]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _glu_op(x, wg, wu, tables, plan, block, interpret, impl_bwd):
     return _fused_glu_2d(x, wg, wu, tables, plan=plan, block=block,
                          interpret=interpret)
 
 
-def _glu_op_fwd(x, wg, wu, tables, plan, block, interpret):
-    y = _glu_op(x, wg, wu, tables, plan, block, interpret)
+def _glu_op_fwd(x, wg, wu, tables, plan, block, interpret, impl_bwd):
+    y = _glu_op(x, wg, wu, tables, plan, block, interpret, impl_bwd)
     return y, (x, wg, wu, tables)
 
 
-def _glu_op_bwd(plan, block, interpret, res, g):
+def _glu_op_bwd(plan, block, interpret, impl_bwd, res, g):
     x, wg, wu, tables = res
     xf, wgf, wuf, gf = (a.astype(jnp.float32) for a in (x, wg, wu, g))
-    zg = xf @ wgf
-    zu = xf @ wuf
-    act_zg, slope = plan_value_and_slope(plan, tables, zg)
-    dzg = gf * zu * slope
-    dzu = gf * act_zg
+    if impl_bwd == "fused":
+        dzg, dzu = _glu_dz_2d(x, wg, wu, g, tables, plan=plan, block=block,
+                              interpret=interpret)
+    else:
+        zg = xf @ wgf
+        zu = xf @ wuf
+        act_zg, slope = plan_value_and_slope(plan, tables, zg)
+        dzg = gf * zu * slope
+        dzu = gf * act_zg
     dx = (dzg @ wgf.T + dzu @ wuf.T).astype(x.dtype)
     dwg = (xf.T @ dzg).astype(wg.dtype)
     dwu = (xf.T @ dzu).astype(wu.dtype)
@@ -127,17 +201,20 @@ def fused_glu(
     act: str | None = None,
     block=DEFAULT_BLOCK,
     interpret: bool | None = None,
+    impl_bwd: str | None = None,
 ) -> jax.Array:
     """``act(x @ w_gate) * (x @ w_up)`` in one kernel pass.
 
     x: (..., K);  w_gate/w_up: (K, N).  Epilogue selection as in
     :func:`fused_linear` (table -> PWL, act -> exact, neither -> identity,
-    which degenerates to plain bilinear GLU).
+    which degenerates to plain bilinear GLU).  ``impl_bwd`` as in
+    :func:`fused_linear`.
     """
     if interpret is None:
         interpret = should_interpret()
     plan, tables = plan_and_operands(table, act)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    y = _glu_op(x2, w_gate, w_up, tables, plan, block, interpret)
+    y = _glu_op(x2, w_gate, w_up, tables, plan, block, interpret,
+                resolve_impl_bwd(impl_bwd))
     return y.reshape(*lead, w_gate.shape[1])

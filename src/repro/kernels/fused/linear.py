@@ -24,6 +24,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.pwl import PWLTable
 
 from .._backend import should_interpret
+from .backward import resolve_impl_bwd
 from .epilogue import EpiloguePlan, plan_and_operands, plan_value_and_slope
 
 # (bm, bn, bk): 128-aligned, x/w/acc tiles ~256 KiB total in f32.
@@ -121,34 +122,117 @@ def _fused_linear_2d(x, w, b, tables, *, plan, block, interpret, has_bias):
     return out[:M, :N]
 
 
-# --- autodiff: fused forward, pure-jnp recompute backward ------------------
-# pallas_call has no VJP; training through act_impl="fused" still has to
-# work, so the backward rematerializes z = x @ w (+ b) and uses the plan's
-# elementwise derivative (for PWL: the per-segment slope m(z), identical to
-# autodiff of the unfused eval_coeff).  Backward fusion is a ROADMAP item.
+# --- autodiff: fused forward, fused (or jnp-recompute) backward ------------
+# pallas_call has no VJP, so _linear_op carries a custom one.  The chain
+# rule needs dz = g * act'(z); the PWL slope m(z) IS that derivative, and
+# the default backward (impl_bwd="fused") decodes it inside a Pallas kernel
+# that rematerializes z blockwise — the same blocked matmul as the forward,
+# with the slope decode as the backward epilogue — so the pre-activation
+# never round-trips HBM.  The resulting dz feeds plain XLA gemms for
+# dx/dw/db (no activation content — nothing left to fuse).
+# impl_bwd="recompute" keeps the original pure-jnp rematerialization as the
+# oracle (tests/test_fused_backward.py pins fused == recompute).
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
-def _linear_op(x, w, b, tables, plan, block, interpret, has_bias):
+def _linear_bwd_kernel(*refs, plan: EpiloguePlan, nk: int, has_bias: bool):
+    n_tab = plan.n_operands
+    x_ref, w_ref, g_ref = refs[0], refs[1], refs[2]
+    off = 3 + (1 if has_bias else 0)
+    b_ref = refs[3] if has_bias else None
+    tab_refs = refs[off : off + n_tab]
+    dz_ref, acc_ref = refs[off + n_tab], refs[off + n_tab + 1]
+
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _():
+        acc = acc_ref[...]
+        if has_bias:
+            acc = acc + b_ref[...].astype(jnp.float32)
+        slope = plan.apply_value_and_slope(acc, *tab_refs)[1]
+        dz_ref[...] = g_ref[...].astype(jnp.float32) * slope
+
+
+@functools.partial(
+    jax.jit, static_argnames=("plan", "block", "interpret", "has_bias")
+)
+def _linear_dz_2d(x, w, b, g, tables, *, plan, block, interpret, has_bias):
+    """dz = g * act'(x @ w + b) as one Pallas pass; returns (M, N) f32."""
+    M, K = x.shape
+    N = w.shape[1]
+    bm, bn, bk = _aligned_block(block, (M, N, K), x.dtype)
+    xp = _pad_to(x, (bm, bk))
+    wp = _pad_to(w, (bk, bn))
+    gp = _pad_to(g.astype(jnp.float32), (bm, bn))
+    Mp, Kp = xp.shape
+    Np = wp.shape[1]
+    nk = Kp // bk
+    grid = (Mp // bm, Np // bn, nk)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+    ]
+    operands = [xp, wp, gp]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k: (0, j)))
+        operands.append(_pad_to(b.reshape(1, N), (1, bn)))
+    for rows, cols in plan.table_specs():
+        in_specs.append(pl.BlockSpec((rows, cols), lambda i, j, k: (0, 0)))
+    operands.extend(tables)
+
+    dz = pl.pallas_call(
+        functools.partial(_linear_bwd_kernel, plan=plan, nk=nk,
+                          has_bias=has_bias),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(*operands)
+    return dz[:M, :N]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _linear_op(x, w, b, tables, plan, block, interpret, has_bias, impl_bwd):
     return _fused_linear_2d(
         x, w, b, tables, plan=plan, block=block, interpret=interpret,
         has_bias=has_bias,
     )
 
 
-def _linear_op_fwd(x, w, b, tables, plan, block, interpret, has_bias):
-    y = _linear_op(x, w, b, tables, plan, block, interpret, has_bias)
+def _linear_op_fwd(x, w, b, tables, plan, block, interpret, has_bias,
+                   impl_bwd):
+    y = _linear_op(x, w, b, tables, plan, block, interpret, has_bias,
+                   impl_bwd)
     return y, (x, w, b, tables)
 
 
-def _linear_op_bwd(plan, block, interpret, has_bias, res, g):
+def _linear_op_bwd(plan, block, interpret, has_bias, impl_bwd, res, g):
     x, w, b, tables = res
     xf, wf, gf = (a.astype(jnp.float32) for a in (x, w, g))
-    z = xf @ wf
-    if has_bias:
-        z = z + b.astype(jnp.float32)
-    _, slope = plan_value_and_slope(plan, tables, z)
-    dz = gf * slope
+    if impl_bwd == "fused":
+        if plan.kind == "identity":  # slope is 1 everywhere: dz == g
+            dz = gf
+        else:
+            dz = _linear_dz_2d(x, w, b, g, tables, plan=plan, block=block,
+                               interpret=interpret, has_bias=has_bias)
+    else:
+        z = xf @ wf
+        if has_bias:
+            z = z + b.astype(jnp.float32)
+        _, slope = plan_value_and_slope(plan, tables, z)
+        dz = gf * slope
     dx = (dz @ wf.T).astype(x.dtype)
     dw = (xf.T @ dz).astype(w.dtype)
     db = jnp.sum(dz, axis=0).astype(b.dtype) if has_bias else None
@@ -168,6 +252,7 @@ def fused_linear(
     act: str | None = None,
     block=DEFAULT_BLOCK,
     interpret: bool | None = None,
+    impl_bwd: str | None = None,
 ) -> jax.Array:
     """``act(x @ w + b)`` in one kernel pass.
 
@@ -175,11 +260,15 @@ def fused_linear(
     table: PWL epilogue (Flex-SFU decode on the accumulator tile).
     act:   exact-activation epilogue by name (mutually exclusive with table).
     Neither -> identity epilogue (plain blocked matmul).
+    impl_bwd: "fused" (Pallas backward kernel decoding the per-segment
+    slope in-kernel; the default) or "recompute" (pure-jnp oracle); None ->
+    the process default (see fused/backward.py).
     """
     if interpret is None:
         interpret = should_interpret()
     plan, tables = plan_and_operands(table, act)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    y = _linear_op(x2, w, b, tables, plan, block, interpret, b is not None)
+    y = _linear_op(x2, w, b, tables, plan, block, interpret, b is not None,
+                   resolve_impl_bwd(impl_bwd))
     return y.reshape(*lead, w.shape[1])

@@ -33,6 +33,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.pwl import PWLTable
 
 from .._backend import should_interpret
+from .backward import resolve_impl_bwd
 from .epilogue import EpiloguePlan, plan_and_operands, plan_value_and_slope
 from .linear import DEFAULT_BLOCK, _aligned_block, _pad_to
 
@@ -96,30 +97,101 @@ def _fused_moe_glu_3d(x, wg, wu, tables, *, plan, block, interpret):
     return out[:, :C, :N]
 
 
-# --- autodiff: fused forward, pure-jnp recompute backward ------------------
-# (see fused/linear.py for the rationale; the recompute is the batched
-# analogue of fused/glu.py's backward)
+# --- autodiff: fused forward, fused (or jnp-recompute) backward ------------
+# (see fused/linear.py for the rationale; the backward kernel is the batched
+# analogue of fused/glu.py's — expert dim as the outer grid axis, two
+# accumulators recomputed blockwise, (dzg, dzu) emitted from one
+# value-and-slope decode; dx/dwg/dwu stay plain XLA einsums)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
-def _moe_glu_op(x, wg, wu, tables, plan, block, interpret):
+def _moe_bwd_kernel(*refs, plan: EpiloguePlan, nk: int):
+    n_tab = plan.n_operands
+    x_ref, wg_ref, wu_ref, g_ref = refs[0], refs[1], refs[2], refs[3]
+    tab_refs = refs[4 : 4 + n_tab]
+    dzg_ref, dzu_ref = refs[4 + n_tab], refs[5 + n_tab]
+    accg_ref, accu_ref = refs[6 + n_tab], refs[7 + n_tab]
+
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _():
+        accg_ref[...] = jnp.zeros_like(accg_ref)
+        accu_ref[...] = jnp.zeros_like(accu_ref)
+
+    x = x_ref[0]
+    accg_ref[...] += jnp.dot(x, wg_ref[0], preferred_element_type=jnp.float32)
+    accu_ref[...] += jnp.dot(x, wu_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _():
+        act_zg, slope = plan.apply_value_and_slope(accg_ref[...], *tab_refs)
+        gf = g_ref[0].astype(jnp.float32)
+        dzg_ref[0] = gf * accu_ref[...] * slope
+        dzu_ref[0] = gf * act_zg
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "block", "interpret"))
+def _moe_dz_3d(x, wg, wu, g, tables, *, plan, block, interpret):
+    """(dzg, dzu) of the per-expert GLU in one pass; each (E, C, N) f32."""
+    E, C, K = x.shape
+    N = wg.shape[2]
+    bm, bn, bk = _aligned_block(block, (C, N, K), x.dtype)
+    xp = _pad_to(x, (1, bm, bk))
+    wgp = _pad_to(wg, (1, bk, bn))
+    wup = _pad_to(wu, (1, bk, bn))
+    gp = _pad_to(g.astype(jnp.float32), (1, bm, bn))
+    Cp, Kp = xp.shape[1], xp.shape[2]
+    Np = wgp.shape[2]
+    nk = Kp // bk
+    grid = (E, Cp // bm, Np // bn, nk)
+
+    in_specs = [
+        pl.BlockSpec((1, bm, bk), lambda e, i, j, k: (e, i, k)),
+        pl.BlockSpec((1, bk, bn), lambda e, i, j, k: (e, k, j)),
+        pl.BlockSpec((1, bk, bn), lambda e, i, j, k: (e, k, j)),
+        pl.BlockSpec((1, bm, bn), lambda e, i, j, k: (e, i, j)),
+    ]
+    for rows, cols in plan.table_specs():
+        in_specs.append(pl.BlockSpec((rows, cols), lambda e, i, j, k: (0, 0)))
+
+    dzg, dzu = pl.pallas_call(
+        functools.partial(_moe_bwd_kernel, plan=plan, nk=nk),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((1, bm, bn), lambda e, i, j, k: (e, i, j))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((E, Cp, Np), jnp.float32)] * 2,
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, bn), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, wgp, wup, gp, *tables)
+    return dzg[:, :C, :N], dzu[:, :C, :N]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _moe_glu_op(x, wg, wu, tables, plan, block, interpret, impl_bwd):
     return _fused_moe_glu_3d(x, wg, wu, tables, plan=plan, block=block,
                              interpret=interpret)
 
 
-def _moe_glu_op_fwd(x, wg, wu, tables, plan, block, interpret):
-    y = _moe_glu_op(x, wg, wu, tables, plan, block, interpret)
+def _moe_glu_op_fwd(x, wg, wu, tables, plan, block, interpret, impl_bwd):
+    y = _moe_glu_op(x, wg, wu, tables, plan, block, interpret, impl_bwd)
     return y, (x, wg, wu, tables)
 
 
-def _moe_glu_op_bwd(plan, block, interpret, res, g):
+def _moe_glu_op_bwd(plan, block, interpret, impl_bwd, res, g):
     x, wg, wu, tables = res
     xf, wgf, wuf, gf = (a.astype(jnp.float32) for a in (x, wg, wu, g))
-    zg = jnp.einsum("ecd,edf->ecf", xf, wgf)
-    zu = jnp.einsum("ecd,edf->ecf", xf, wuf)
-    act_zg, slope = plan_value_and_slope(plan, tables, zg)
-    dzg = gf * zu * slope
-    dzu = gf * act_zg
+    if impl_bwd == "fused":
+        dzg, dzu = _moe_dz_3d(x, wg, wu, g, tables, plan=plan, block=block,
+                              interpret=interpret)
+    else:
+        zg = jnp.einsum("ecd,edf->ecf", xf, wgf)
+        zu = jnp.einsum("ecd,edf->ecf", xf, wuf)
+        act_zg, slope = plan_value_and_slope(plan, tables, zg)
+        dzg = gf * zu * slope
+        dzu = gf * act_zg
     dx = (
         jnp.einsum("ecf,edf->ecd", dzg, wgf)
         + jnp.einsum("ecf,edf->ecd", dzu, wuf)
@@ -142,14 +214,17 @@ def fused_moe_glu(
     act: str | None = None,
     block=DEFAULT_BLOCK,
     interpret: bool | None = None,
+    impl_bwd: str | None = None,
 ) -> jax.Array:
     """Per-expert ``act(x[e] @ w_gate[e]) * (x[e] @ w_up[e])`` in one pass.
 
     x: (E, C, K) dispatched expert buckets;  w_gate/w_up: (E, K, N).
     Epilogue selection as in :func:`fused_glu` (table -> PWL, act -> exact,
-    neither -> identity / plain bilinear GLU).  Returns (E, C, N).
+    neither -> identity / plain bilinear GLU).  ``impl_bwd`` as in
+    :func:`fused_linear`.  Returns (E, C, N).
     """
     if interpret is None:
         interpret = should_interpret()
     plan, tables = plan_and_operands(table, act)
-    return _moe_glu_op(x, w_gate, w_up, tables, plan, block, interpret)
+    return _moe_glu_op(x, w_gate, w_up, tables, plan, block, interpret,
+                       resolve_impl_bwd(impl_bwd))

@@ -21,6 +21,7 @@ from jax.experimental import pallas as pl
 from repro.core.pwl import PWLTable
 
 from .._backend import should_interpret
+from .backward import resolve_impl_bwd
 from .epilogue import EpiloguePlan, plan_and_operands, plan_value_and_slope
 from .linear import _pad_to, _round_up
 
@@ -73,10 +74,22 @@ def _fused_rmsnorm_2d(x, scale, tables, *, plan, block_rows, eps, interpret):
     return out[:M, :D]
 
 
-# --- autodiff: fused forward, jnp-reference backward -----------------------
-# (see fused/linear.py for the rationale; here the backward is jax.vjp of a
-# jnp mirror of the kernel — the PWL step function contributes gradient only
-# through the affine MADD, matching autodiff of the unfused eval_coeff)
+# --- autodiff: fused forward, fused (or jnp-reference) backward ------------
+# (see fused/linear.py for the rationale)  RMSNorm's backward is row-local:
+# with r = rsqrt(mean(x^2)+eps), xh = x*r, w = 1+scale, y = xh*w and
+# upstream g, the chain is
+#
+#     dy = g * act'(y)            (the PWL slope, decoded in-kernel)
+#     ds = sum_rows(dy * xh)      (per row block; summed across blocks)
+#     du = dy * w
+#     dx = r * (du - xh * mean(du * xh))
+#
+# so the backward kernel recomputes r/xh/y on the resident tile, decodes the
+# slope, and writes dx plus a per-row-block partial of ds (the only
+# cross-row reduction, finished in jnp).  impl_bwd="recompute" keeps jax.vjp
+# of the jnp mirror as the oracle — the PWL step function contributes
+# gradient only through the affine MADD, so both implementations see the
+# identical slope (autodiff of the decode treats the compares as constants).
 
 
 def _rmsnorm_ref_jnp(x, scale, tables, plan, eps):
@@ -86,24 +99,93 @@ def _rmsnorm_ref_jnp(x, scale, tables, plan, eps):
     return plan_value_and_slope(plan, tables, y)[0].astype(x.dtype)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
-def _rmsnorm_op(x, scale, tables, plan, block_rows, eps, interpret):
+def _rmsnorm_bwd_kernel(*refs, plan: EpiloguePlan, eps: float, d: int):
+    n_tab = plan.n_operands
+    x_ref, s_ref, g_ref = refs[0], refs[1], refs[2]
+    tab_refs = refs[3 : 3 + n_tab]
+    dx_ref, ds_ref = refs[3 + n_tab], refs[4 + n_tab]
+
+    xf = x_ref[...].astype(jnp.float32)
+    var = jnp.sum(jnp.square(xf), axis=-1, keepdims=True) / d
+    r = jax.lax.rsqrt(var + eps)
+    xh = xf * r
+    w = 1.0 + s_ref[...].astype(jnp.float32)
+    y = xh * w
+    slope = plan.apply_value_and_slope(y, *tab_refs)[1]
+    dy = g_ref[...].astype(jnp.float32) * slope
+    # per-block partial of the scale gradient (padded rows have g == 0)
+    ds_ref[...] = jnp.sum(dy * xh, axis=0, keepdims=True)
+    du = dy * w
+    c = jnp.sum(du * xh, axis=-1, keepdims=True) / d
+    dx_ref[...] = r * (du - xh * c)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("plan", "block_rows", "eps", "interpret")
+)
+def _rmsnorm_bwd_2d(x, scale, g, tables, *, plan, block_rows, eps, interpret):
+    """(dx, ds) of the fused RMSNorm; (M, D) and (D,) f32."""
+    M, D = x.shape
+    sub = 16 if jnp.dtype(x.dtype).itemsize == 2 else 8
+    bm = min(block_rows, _round_up(M, sub))
+    xp = _pad_to(x, (bm, 128))
+    sp = _pad_to(scale.reshape(1, D), (1, 128))
+    gp = _pad_to(g.astype(jnp.float32), (bm, 128))
+    Mp, Dp = xp.shape
+    grid = (Mp // bm,)
+
+    in_specs = [
+        pl.BlockSpec((bm, Dp), lambda i: (i, 0)),
+        pl.BlockSpec((1, Dp), lambda i: (0, 0)),
+        pl.BlockSpec((bm, Dp), lambda i: (i, 0)),
+    ]
+    for rows, cols in plan.table_specs():
+        in_specs.append(pl.BlockSpec((rows, cols), lambda i: (0, 0)))
+
+    dx, ds_part = pl.pallas_call(
+        functools.partial(_rmsnorm_bwd_kernel, plan=plan, eps=eps, d=D),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((bm, Dp), lambda i: (i, 0)),
+            pl.BlockSpec((1, Dp), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Mp, Dp), jnp.float32),
+            jax.ShapeDtypeStruct((Mp // bm, Dp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, sp, gp, *tables)
+    return dx[:M, :D], jnp.sum(ds_part, axis=0)[:D]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _rmsnorm_op(x, scale, tables, plan, block_rows, eps, interpret, impl_bwd):
     return _fused_rmsnorm_2d(x, scale, tables, plan=plan,
                              block_rows=block_rows, eps=eps,
                              interpret=interpret)
 
 
-def _rmsnorm_op_fwd(x, scale, tables, plan, block_rows, eps, interpret):
-    y = _rmsnorm_op(x, scale, tables, plan, block_rows, eps, interpret)
+def _rmsnorm_op_fwd(x, scale, tables, plan, block_rows, eps, interpret,
+                    impl_bwd):
+    y = _rmsnorm_op(x, scale, tables, plan, block_rows, eps, interpret,
+                    impl_bwd)
     return y, (x, scale, tables)
 
 
-def _rmsnorm_op_bwd(plan, block_rows, eps, interpret, res, g):
+def _rmsnorm_op_bwd(plan, block_rows, eps, interpret, impl_bwd, res, g):
     x, scale, tables = res
-    _, vjp = jax.vjp(
-        lambda x_, s_: _rmsnorm_ref_jnp(x_, s_, tables, plan, eps), x, scale
-    )
-    dx, ds = vjp(g)
+    if impl_bwd == "fused":
+        dx, ds = _rmsnorm_bwd_2d(x, scale, g, tables, plan=plan,
+                                 block_rows=block_rows, eps=eps,
+                                 interpret=interpret)
+        dx, ds = dx.astype(x.dtype), ds.astype(scale.dtype)
+    else:
+        _, vjp = jax.vjp(
+            lambda x_, s_: _rmsnorm_ref_jnp(x_, s_, tables, plan, eps),
+            x, scale,
+        )
+        dx, ds = vjp(g)
     dtables = jax.tree_util.tree_map(jnp.zeros_like, tables)
     return dx, ds, dtables
 
@@ -120,16 +202,19 @@ def fused_rmsnorm(
     act: str | None = None,
     block_rows: int = DEFAULT_BLOCK_ROWS,
     interpret: bool | None = None,
+    impl_bwd: str | None = None,
 ) -> jax.Array:
     """RMSNorm (optionally + activation) in one kernel pass.
 
     x: (..., D);  scale: (D,) — applied as ``(1 + scale)`` like
-    ``layers.rms_norm``.  Epilogue selection as in :func:`fused_linear`.
+    ``layers.rms_norm``.  Epilogue selection as in :func:`fused_linear`;
+    ``impl_bwd`` as in :func:`fused_linear`.
     """
     if interpret is None:
         interpret = should_interpret()
     plan, tables = plan_and_operands(table, act)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    y = _rmsnorm_op(x2, scale, tables, plan, block_rows, eps, interpret)
+    y = _rmsnorm_op(x2, scale, tables, plan, block_rows, eps, interpret,
+                    resolve_impl_bwd(impl_bwd))
     return y.reshape(*lead, x.shape[-1])

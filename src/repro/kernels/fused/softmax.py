@@ -23,10 +23,17 @@ additionally clamped to ``>= -1e4`` so the linear left tail of the PWL
 table cannot overflow on ``-1e30`` fill values; every surviving entry is
 zeroed by the mask regardless.
 
-The backward pass is a pure-jnp recompute (:func:`pwl_softmax_reference`)
-via ``jax.vjp`` — matching the custom-VJP discipline of the other fused
-kernels (forward fused, backward rematerializes; backward fusion is a
-ROADMAP item).
+The backward pass defaults to a fused Pallas kernel
+(``impl_bwd="fused"``): it rematerializes the row-resident forward
+(max/shift/decode/clamp/mask/normalize) on the same ``(block_rows, N)``
+stripe, decodes the per-segment PWL *slope* alongside the value
+(``fused/epilogue.pwl_value_and_slope_tile``), and applies the softmax
+VJP chain in-register — the score matrix never round-trips HBM between
+forward and backward.  ``impl_bwd="recompute"`` keeps the pure-jnp
+``jax.vjp`` of :func:`pwl_softmax_reference` as the oracle
+(``tests/test_fused_backward.py`` pins fused == recompute).  Both paths
+differentiate the row max — the usual flash stop-gradient shortcut is
+only exact for a true ``exp``; see :func:`pwl_softmax_reference`.
 
 Width bound: the whole (128-padded) reduction axis stays VMEM-resident and
 the row block bottoms out at one sublane tile, so rows wider than ~52-64k
@@ -47,6 +54,7 @@ from jax.experimental import pallas as pl
 from repro.core.pwl import PWLTable
 
 from .._backend import should_interpret
+from .backward import resolve_impl_bwd
 from .epilogue import EpiloguePlan, plan_and_operands, plan_value_and_slope
 from .linear import _round_up
 
@@ -161,7 +169,17 @@ def pwl_softmax_reference(x, mask, tables, plan: EpiloguePlan):
 
     Bit-matches the kernel op-for-op (``mask=None`` == the kernel's
     maskless variant on unpadded rows); tests compare against it, and the
-    backward pass autodiffs through it.
+    recompute backward autodiffs through it.
+
+    The row max IS differentiated — no ``stop_gradient``.  Flash kernels
+    for the true ``exp`` conventionally stop-grad the max because softmax
+    is shift-invariant, so the max-shift term cancels *exactly*
+    (``sum(du * u) == 0``).  For a PWL exp that cancellation needs
+    ``f' == f`` and fails by the table's slope error: the dropped term is
+    O(row_len * slope_error) per row — measured ~0.4 absolute on
+    realistic inputs, far above grad-parity tolerances.  The fused
+    backward therefore reproduces the full max gradient, distributed
+    equally across argmax ties (jnp's ``max`` VJP convention).
     """
     xf = x.astype(jnp.float32)
     xm = xf if mask is None else jnp.where(mask > 0, xf, jnp.float32(_NEG_FILL))
@@ -174,32 +192,140 @@ def pwl_softmax_reference(x, mask, tables, plan: EpiloguePlan):
     return (p / jnp.maximum(l, jnp.float32(1e-30))).astype(x.dtype)
 
 
-# --- autodiff: fused forward, pure-jnp recompute backward ------------------
+# --- autodiff: fused forward, fused (or jnp-recompute) backward ------------
+# The VJP of y = u/L with u = max(pwl(t - m), 0)*mask, m = rowmax,
+# L = max(sum(u), 1e-30):
+#
+#     du = g/L - gl * sum(g*u)/L^2          (gl: gradient gate of max(l, .))
+#     dt = du * mask * gate_p * slope * gate_t   (gates of the two clamps)
+#     dm = -sum_j(dt)                       (the shifted scores all see -m)
+#     dx = (dt + dm * eq/ntie) * mask       (eq: argmax ties; jnp's max VJP
+#                                            splits dm equally across them)
+#
+# Each maximum/clamp gate mirrors jnp's tie convention (1 above the
+# threshold, 0.5 at it, 0 below) so the kernel reproduces jax.vjp of the
+# reference op-for-op — including the row-max term, which for a PWL exp is
+# NOT negligible (see pwl_softmax_reference).  The rows stay resident, the
+# slope comes from the same delta-accumulation decode as the forward
+# value, and the backward makes exactly one pass over the scores.
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _softmax_bwd_kernel(*refs, plan: EpiloguePlan, has_mask: bool,
+                        n_valid: int, seq_len: int, causal: bool, window):
+    n_tab = plan.n_operands
+    x_ref = refs[0]
+    off = 2 if has_mask else 1
+    g_ref = refs[off]
+    tab_refs = refs[off + 1 : off + 1 + n_tab]
+    dx_ref = refs[off + 1 + n_tab]
+
+    xf = x_ref[...].astype(jnp.float32)
+    if has_mask:
+        mask = refs[1][...]
+    else:
+        col = jax.lax.broadcasted_iota(jnp.int32, xf.shape, 1)
+        keep = col < n_valid
+        if causal or window is not None:
+            row = jax.lax.broadcasted_iota(jnp.int32, xf.shape, 0)
+            row = row + pl.program_id(0) * xf.shape[0]
+            qpos = jax.lax.rem(row, seq_len)
+            if causal:
+                keep &= col <= qpos
+            if window is not None:
+                keep &= (qpos - col) < window
+        mask = keep.astype(jnp.float32)
+    xm = jnp.where(mask > 0, xf, jnp.float32(_NEG_FILL))
+    m = jnp.max(xm, axis=-1, keepdims=True)
+    t = xm - m
+    s = jnp.maximum(t, jnp.float32(_SHIFT_CLAMP))
+    p_raw, slope = plan.apply_value_and_slope(s, *tab_refs)
+    u = jnp.maximum(p_raw, 0.0) * mask
+    l = jnp.sum(u, axis=-1, keepdims=True)
+    L = jnp.maximum(l, jnp.float32(1e-30))
+
+    gf = g_ref[...].astype(jnp.float32)
+    gl = (l > 1e-30).astype(jnp.float32) + 0.5 * (l == 1e-30)
+    du = gf / L - gl * jnp.sum(gf * u, axis=-1, keepdims=True) / (L * L)
+    gate_p = (p_raw > 0.0).astype(jnp.float32) + 0.5 * (p_raw == 0.0)
+    gate_t = (t > _SHIFT_CLAMP).astype(jnp.float32) + 0.5 * (
+        t == _SHIFT_CLAMP
+    )
+    dt = du * mask * gate_p * slope * gate_t
+    dm = -jnp.sum(dt, axis=-1, keepdims=True)
+    eq = (xm == m).astype(jnp.float32)
+    ntie = jnp.sum(eq, axis=-1, keepdims=True)
+    dx_ref[...] = (dt + dm * eq / ntie) * mask
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "plan", "block_rows", "interpret", "seq_len", "causal", "window"))
+def _softmax_bwd_2d(x, mask, g, tables, *, plan, block_rows, interpret,
+                    seq_len, causal, window):
+    """dx of the fused PWL softmax in one Pallas pass; (R, N) f32."""
+    R, N = x.shape
+    Np = _round_up(N, 128)
+    has_mask = mask is not None
+    # one extra resident f32 array (g) vs the forward's budget count
+    bm = _row_block(block_rows, R, Np, True)
+    xp = jnp.pad(x, ((0, _round_up(R, bm) - R), (0, Np - N)))
+    Rp = xp.shape[0]
+    gp = jnp.pad(g.astype(jnp.float32), ((0, Rp - R), (0, Np - N)))
+
+    operands = [xp]
+    in_specs = [pl.BlockSpec((bm, Np), lambda i: (i, 0))]
+    if has_mask:
+        operands.append(jnp.pad(mask, ((0, Rp - R), (0, Np - N))))
+        in_specs.append(pl.BlockSpec((bm, Np), lambda i: (i, 0)))
+    operands.append(gp)
+    in_specs.append(pl.BlockSpec((bm, Np), lambda i: (i, 0)))
+    for rows, cols in plan.table_specs():
+        in_specs.append(pl.BlockSpec((rows, cols), lambda i: (0, 0)))
+    operands.extend(tables)
+
+    dx = pl.pallas_call(
+        functools.partial(_softmax_bwd_kernel, plan=plan, has_mask=has_mask,
+                          n_valid=N, seq_len=seq_len, causal=causal,
+                          window=window),
+        grid=(Rp // bm,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, Np), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Rp, Np), jnp.float32),
+        interpret=interpret,
+    )(*operands)
+    return dx[:R, :N]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
 def _softmax_op(x, mask, tables, plan, block_rows, interpret, seq_len,
-                causal, window):
+                causal, window, impl_bwd):
     return _fused_softmax_2d(x, mask, tables, plan=plan,
                              block_rows=block_rows, interpret=interpret,
                              seq_len=seq_len, causal=causal, window=window)
 
 
 def _softmax_op_fwd(x, mask, tables, plan, block_rows, interpret, seq_len,
-                    causal, window):
+                    causal, window, impl_bwd):
     y = _softmax_op(x, mask, tables, plan, block_rows, interpret, seq_len,
-                    causal, window)
+                    causal, window, impl_bwd)
     return y, (x, mask, tables)
 
 
 def _softmax_op_bwd(plan, block_rows, interpret, seq_len, causal, window,
-                    res, g):
+                    impl_bwd, res, g):
     x, mask, tables = res
-    m = mask
-    if m is None and (causal or window is not None):
-        m = _static_mask(x.shape[0], x.shape[1], seq_len, causal, window)
-    _, vjp = jax.vjp(lambda xx: pwl_softmax_reference(xx, m, tables, plan), x)
-    dx = vjp(g)[0].astype(x.dtype)
+    if impl_bwd == "fused":
+        dx = _softmax_bwd_2d(x, mask, g, tables, plan=plan,
+                             block_rows=block_rows, interpret=interpret,
+                             seq_len=seq_len, causal=causal,
+                             window=window).astype(x.dtype)
+    else:
+        m = mask
+        if m is None and (causal or window is not None):
+            m = _static_mask(x.shape[0], x.shape[1], seq_len, causal, window)
+        _, vjp = jax.vjp(
+            lambda xx: pwl_softmax_reference(xx, m, tables, plan), x
+        )
+        dx = vjp(g)[0].astype(x.dtype)
     dtables = jax.tree_util.tree_map(jnp.zeros_like, tables)
     dmask = None if mask is None else jnp.zeros_like(mask)
     return dx, dmask, dtables
@@ -218,6 +344,7 @@ def fused_pwl_softmax(
     window: int | None = None,
     block_rows: int = DEFAULT_BLOCK_ROWS,
     interpret: bool | None = None,
+    impl_bwd: str | None = None,
 ) -> jax.Array:
     """Softmax over the last axis with a PWL-approximated exponential.
 
@@ -233,6 +360,7 @@ def fused_pwl_softmax(
             zero offset; key position = last axis index) — no score-sized
             mask array is ever materialized.  Mutually exclusive with
             ``mask``; use ``mask`` for dynamic validity (decode caches).
+    impl_bwd: backward implementation as in :func:`fused_linear`.
     """
     if interpret is None:
         interpret = should_interpret()
@@ -256,5 +384,5 @@ def fused_pwl_softmax(
             jnp.float32
         )
     y = _softmax_op(x2, mask2, tables, plan, block_rows, interpret, seq_len,
-                    causal, window)
+                    causal, window, resolve_impl_bwd(impl_bwd))
     return y.reshape(*lead, N).astype(x.dtype)

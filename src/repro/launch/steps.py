@@ -6,6 +6,7 @@ used by both the real launcher (train.py/serve.py) and the dry-run.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Optional
 
@@ -14,6 +15,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.distributed.sharding import Rules, make_rules, sanitize_spec, use_rules
+from repro.kernels import fused
 from repro.models import Model, ShapeCell, input_specs
 from repro.models.common import logical_specs, shape_structs
 from repro.optim import adamw
@@ -140,8 +142,19 @@ def build_train_step(cfg, mesh, cell: ShapeCell, opt_cfg: Optional[adamw.AdamWCo
     }
     bspecs = batch_specs(cfg, cell, rules)
 
+    # cfg.act_impl_bwd pins the backward implementation for every fused
+    # site the loss traces ("fused" Pallas kernels, "recompute" as the jnp
+    # oracle / escape hatch); None defers to the ambient use_impl_bwd
+    # default.  The context is entered inside train_step because the mode
+    # is read at TRACE time — this covers jit retraces too.
+    impl_bwd = getattr(cfg, "act_impl_bwd", None)
+    if impl_bwd is not None:
+        impl_bwd = fused.resolve_impl_bwd(impl_bwd)  # validate at build
+
     def train_step(state, batch):
-        with use_rules(rules):
+        bwd_ctx = (fused.use_impl_bwd(impl_bwd) if impl_bwd is not None
+                   else contextlib.nullcontext())
+        with use_rules(rules), bwd_ctx:
             if microbatches <= 1:
                 (loss, metrics), grads = jax.value_and_grad(
                     lambda p: model.loss(p, batch), has_aux=True

@@ -45,6 +45,12 @@ def train(argv=None):
         "--dump-plan", default=None, metavar="PATH",
         help="write the exact activation plan this run uses as JSON",
     )
+    ap.add_argument(
+        "--impl-bwd", default=None, choices=["fused", "recompute"],
+        help="backward implementation for fused activation sites: 'fused' "
+        "(Pallas backward kernels, the default) or 'recompute' (jnp "
+        "rematerialization oracle — escape hatch; see docs/plans.md)",
+    )
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
@@ -73,9 +79,15 @@ def train(argv=None):
             )
     else:
         cfg = getter(args.arch)
+    if args.impl_bwd is not None:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, act_impl_bwd=args.impl_bwd)
     plan = sfu.plan_for(cfg)
     print(f"[train] activation plan {plan.fingerprint}: "
           f"{ {k: s.impl for k, s in plan.items()} }", flush=True)
+    print(f"[train] fused backward impl: "
+          f"{cfg.act_impl_bwd or 'fused (ambient default)'}", flush=True)
     if args.dump_plan:
         print(f"[train] plan -> {sfu.dump_plan(plan, args.dump_plan)}", flush=True)
     mesh = make_host_mesh(model=args.model_parallel)

@@ -58,6 +58,14 @@ class ModelConfig:
     # PWL table storage format ("f32" | "bf16" | "f16"): the paper's
     # multi-format tables (Sec. III); applies to every site compile_plan emits
     act_table_dtype: str = "f32"
+    # backward implementation for fused-kernel sites ("fused" | "recompute"):
+    # "fused" runs the Pallas backward kernels, which decode the per-segment
+    # PWL *slope* in-kernel (the slope IS the activation derivative);
+    # "recompute" is the pure-jnp rematerialization oracle — the escape
+    # hatch if a fused backward misbehaves on some backend.  None defers to
+    # the process default (fused; scoped via kernels.fused.use_impl_bwd).
+    # build_train_step pins a non-None value for the whole train step.
+    act_impl_bwd: Optional[str] = None
     # explicit repro.sfu.ActivationPlan — when set it IS the activation
     # resolution (the legacy act_impl/pwl_* knobs above are ignored);
     # when None, sfu.plan_for(cfg) translates the legacy knobs.

@@ -754,7 +754,13 @@ def _fused_mlp_hidden(cfg: ModelConfig, params, x, plan):
     per-use all-gather GSPMD performs for the FSDP-sharded unfused gemms.
     The hidden is d_ff-local, so there is no psum.  A d_ff that doesn't
     divide the mlp extent replicates the column dim instead (exactly what
-    ``sanitize_spec`` does to the unfused constraint for the same shape)."""
+    ``sanitize_spec`` does to the unfused constraint for the same shape).
+
+    Differentiable: the fused ops carry custom VJPs whose default backward
+    is a fused Pallas kernel decoding the per-segment PWL slope (the exact
+    local derivative) on the rematerialized accumulator tile — including
+    per-shard inside the shard_map bodies below.  ``cfg.act_impl_bwd`` /
+    ``fused.use_impl_bwd`` select the jnp recompute oracle instead."""
     key = sfu.site_key(sfu.SITE_MLP, cfg.activation)
     spec = plan.get(key)
     if spec is None or spec.impl != "fused":

@@ -177,7 +177,10 @@ def _moe_local_dispatch(cfg: ModelConfig, params, x, act, ep_axis,
     # --- expert FFN on local experts ---
     if fused_table is not None:
         # fused path: both gemms + PWL activation + gating in one Pallas
-        # kernel — the (E, C, F) pre-activations never round-trip HBM
+        # kernel — the (E, C, F) pre-activations never round-trip HBM.
+        # Training goes through the kernel's custom VJP: the backward
+        # rematerializes zg/zu per expert blockwise and decodes the PWL
+        # slope in-kernel (impl_bwd="recompute" restores jnp autodiff math)
         from repro.kernels import fused
 
         h = fused.fused_moe_glu(

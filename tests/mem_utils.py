@@ -1,0 +1,47 @@
+"""Compiled-memory helpers for peak-allocation regression tests.
+
+XLA's ``Compiled.memory_analysis()`` reports the temp-buffer footprint the
+compiled executable will allocate (everything that is neither an argument
+nor an output).  That is the honest place to pin "the fused attention
+backward never materializes a dense (S, T) score tensor": autodiff of the
+dense reference necessarily keeps O(S*T) intermediates alive for the
+backward, while the blocked backward's live set is the O(S)-per-row stats
+plus block-sized scratch, so its temp bytes grow ~linearly in S.
+
+``temp_bytes`` works on the CPU backend (interpret-mode Pallas included) as
+well as on real accelerators; callers that hit a backend without the
+analysis get ``None`` and should skip rather than fail.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+
+
+def compiled_memory_stats(fn: Callable, *args, **kwargs):
+    """``memory_analysis()`` of ``jit(fn)`` lowered for concrete args.
+
+    Returns the backend's ``CompiledMemoryStats`` (or ``None`` when the
+    backend does not implement the analysis).  ``fn`` is jitted here, so
+    pass a plain python callable.
+    """
+    compiled = jax.jit(fn).lower(*args, **kwargs).compile()
+    try:
+        return compiled.memory_analysis()
+    except NotImplementedError:
+        return None
+
+
+def temp_bytes(fn: Callable, *args, **kwargs) -> Optional[int]:
+    """Temp-buffer bytes of compiled ``fn`` (None if unavailable).
+
+    Arguments and outputs are excluded by construction — this is exactly
+    the transient working set (saved residuals, rematerialized scores,
+    kernel scratch) that a backward pass adds on top of the model state.
+    """
+    stats = compiled_memory_stats(fn, *args, **kwargs)
+    if stats is None:
+        return None
+    size = getattr(stats, "temp_size_in_bytes", None)
+    return None if size is None else int(size)

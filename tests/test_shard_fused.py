@@ -67,6 +67,74 @@ def test_train_step_2x2_mesh_zero_fallbacks():
     assert "OK" in r.stdout
 
 
+def test_train_step_2x2_mesh_fused_backward_grad_parity():
+    """ISSUE 9 mesh acceptance: a full train step whose gradients flow
+    through the fused Pallas BACKWARD kernels (impl_bwd="fused" is the
+    default) on a 2x2 mesh, warnings-as-errors — zero fallbacks — and the
+    updated parameters match (a) the same step on a 1-device mesh and
+    (b) the jnp-recompute backward oracle on the same 2x2 mesh."""
+    r = run_py("""
+        import warnings
+        warnings.filterwarnings("error", message=".*falling back.*")
+        import jax, jax.numpy as jnp, numpy as np
+        import repro
+        from repro.configs import get_reduced_config
+        from repro.kernels import fused
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.steps import build_train_step
+        from repro.models import Model, ShapeCell
+        from repro.optim import adamw
+
+        cfg = get_reduced_config("repro-100m", act_impl="fused",
+                                 pwl_softmax=True, force_dp_only=False)
+        cell = ShapeCell("t", 64, 4, "train")
+        model = Model(cfg)
+        batch = {
+            "tokens": jax.random.randint(
+                jax.random.PRNGKey(1), (4, 64), 0, cfg.vocab_size),
+            "targets": jax.random.randint(
+                jax.random.PRNGKey(2), (4, 64), 0, cfg.vocab_size),
+        }
+
+        def one_step(mesh, impl_bwd):
+            fn, in_sh, out_sh, structs, extra = build_train_step(
+                cfg, mesh, cell, microbatches=1)
+            # use_impl_bwd is read at TRACE time: wrap the jit execution
+            with fused.use_impl_bwd(impl_bwd):
+                jstep = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+                state = adamw.init_state(model.init(jax.random.PRNGKey(0)))
+                state, metrics = jstep(state, batch)
+            return jax.device_get(state["params"]), float(metrics["loss"])
+
+        p_ref, l_ref = one_step(jax.make_mesh((1, 1), ("data", "model")),
+                                "fused")
+        p_mesh, l_mesh = one_step(make_host_mesh(model=2), "fused")
+        p_rec, l_rec = one_step(make_host_mesh(model=2), "recompute")
+
+        def maxdiff(a, b):
+            return max(
+                float(np.max(np.abs(np.asarray(x, np.float32)
+                                    - np.asarray(y, np.float32))))
+                for x, y in zip(jax.tree_util.tree_leaves(a),
+                                jax.tree_util.tree_leaves(b)))
+
+        assert jnp.isfinite(l_mesh), l_mesh
+        # mesh vs no-mesh: sharded reductions reorder f32 sums (~1e-6 on
+        # the updated params; measured 6e-6)
+        assert abs(l_mesh - l_ref) < 1e-3 * abs(l_ref), (l_mesh, l_ref)
+        d_mesh = maxdiff(p_mesh, p_ref)
+        assert d_mesh < 1e-4, d_mesh
+        # fused vs recompute backward on the SAME mesh: near-bitwise
+        # (measured 5e-13) — the kernels compute the same gradient
+        assert l_mesh == l_rec, (l_mesh, l_rec)
+        d_bwd = maxdiff(p_mesh, p_rec)
+        assert d_bwd < 1e-9, d_bwd
+        print("OK", l_mesh, d_mesh, d_bwd)
+    """, devices=4)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
+
+
 def test_paged_serve_2x2_mesh_zero_fallbacks_and_token_parity():
     """A full paged serve session on a 2x2 mesh: zero fused fallbacks
     (warnings-as-errors) and EXACT token parity with the no-mesh engine —
