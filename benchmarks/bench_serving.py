@@ -22,7 +22,12 @@ JSON summary makes that check machine-readable:
 t(split_kv @ capacity V, valid V) — ~1.0 means work proportional to
 valid pages, independent of capacity.  Also per cell: output MSE vs the
 exact-softmax oracle, and a 2-request continuous-batching engine session
-(tokens/sec end to end, fused-fallback count must be 0).
+(tokens/sec end to end, fused-fallback count must be 0).  The
+``preemption_overhead`` summary cell runs the same engine at an
+oversubscribed page budget under both admission policies: reserved
+(serialized by worst-case reservation) vs optimistic (parallel but paying
+recompute preemptions), reporting tok/s, preemption count, and
+replayed-prefill tokens for each.
 
     PYTHONPATH=src python benchmarks/bench_serving.py [--quick] [--out PATH]
 
@@ -32,6 +37,7 @@ only meaningful on TPU; --quick exists for CI smoke coverage.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import math
 import pathlib
 import warnings
@@ -214,6 +220,36 @@ def main(argv=None):
     session_tok_s = engine.generated / session_s
     emit("engine_session_2req", session_s * 1e6, f"{session_tok_s:.1f}tok/s")
 
+    # preemption overhead: reserved vs optimistic at an OVERSUBSCRIBED page
+    # budget.  3 requests of worst-case 3 pages each on 2 slots with only 5
+    # usable pages: reserved serializes admissions (worst-case reservation
+    # can't cover two), optimistic runs two at once and pays for it with
+    # recompute preemptions — the tok/s gap against the replayed-prefill
+    # token count is the cost of the optimism (ISSUE 10).
+    prompt_len = 2 * ps - 2          # 2 pages, grows to 3 mid-decode
+    preempt_reqs = [
+        GenRequest(f"p{i}", rng.integers(1, 500, size=prompt_len).tolist(), 8)
+        for i in range(3)
+    ]
+    preemption_cell = {}
+    for policy in ("reserved", "optimistic"):
+        eng = PagedServingEngine(
+            model, params, max_slots=2, page_size=ps,
+            max_context=prompt_len + 8 + ps, num_pages=6,
+            policy=policy, max_preemptions=32)
+        t0 = _time.perf_counter()
+        eng.run([dataclasses.replace(r) for r in preempt_reqs])
+        dt = _time.perf_counter() - t0
+        h = eng.health_summary()
+        preemption_cell[policy] = {
+            "tok_per_s": round(eng.generated / dt, 1),
+            "preemptions": h["preemptions"],
+            "replayed_prefill_tokens": h["replayed_prefill_tokens"],
+        }
+        emit(f"preemption_{policy}", dt * 1e6,
+             f"{preemption_cell[policy]['tok_per_s']}tok/s_"
+             f"{h['preemptions']}preempt")
+
     payload = {
         "benchmark": "serving",
         **provenance(args.quick),
@@ -231,6 +267,7 @@ def main(argv=None):
                 "tok_per_s": round(session_tok_s, 1),
                 "fused_fallbacks": len(fallbacks),
             },
+            "preemption_overhead": preemption_cell,
         },
     }
     write_bench_json(args.out, payload)

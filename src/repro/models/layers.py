@@ -536,11 +536,12 @@ def paged_decode_attention(
     if softmax_table is not None:
         from repro.kernels import fused
 
+        softmax_key = sfu.site_key(sfu.SITE_SOFTMAX, "exp")
         rules = active_mesh_rules()
         if rules is None:
-            return fused.paged_flash_decode(
+            return sfu.guard.check_fused(softmax_key, fused.paged_flash_decode(
                 q, k_pages, v_pages, page_table, kv_len, table=softmax_table
-            )
+            ))
         if logical_extent(rules, "cache_seq") > 1:
             sfu.warn_fused_fallback(
                 sfu.site_key(sfu.SITE_SOFTMAX, "exp"),
@@ -561,12 +562,12 @@ def paged_decode_attention(
                     q_l, kp_l, vp_l, pt_l, len_l, table=table
                 )
 
-            return shf.run_sharded(
+            return sfu.guard.check_fused(softmax_key, shf.run_sharded(
                 rules, body, (q, k_pages, v_pages, page_table, kv_len),
                 (shf.P(b, None, h, None), shf.P(hk, None, None, None),
                  shf.P(hk, None, None, None), shf.P(b, None), shf.P(b)),
                 shf.P(b, None, h, None),
-            )
+            ))
     from repro.serving.kv_cache import gather_pages
 
     k_dense = gather_pages(k_pages, page_table)
@@ -715,20 +716,25 @@ def _attn_softmax_dispatch(cfg, q, k, v, *, causal, window, exp_fn, plan):
     T = k.shape[1]
     table = _softmax_fused_table(plan)
     if table is not None:
+        # sfu.guard checkpoint sits on the full (unsharded) output — inside
+        # a shard_map body the collector would capture per-shard tracers
+        softmax_key = sfu.site_key(sfu.SITE_SOFTMAX, "exp")
         rules = active_mesh_rules()
         if rules is not None:
-            return _shard_fused_attention(
+            y = _shard_fused_attention(
                 cfg, q, k, v, causal=causal, window=window, table=table,
                 rules=rules,
             )
-        if _dense_softmax_preferred(B * H * S * T, T, window, T):
-            return dense_pwl_attention(q, k, v, table=table, causal=causal,
-                                       window=window)
-        from repro.kernels import fused
+        elif _dense_softmax_preferred(B * H * S * T, T, window, T):
+            y = dense_pwl_attention(q, k, v, table=table, causal=causal,
+                                    window=window)
+        else:
+            from repro.kernels import fused
 
-        return fused.fused_flash_attention(
-            q, k, v, table=table, causal=causal, window=window
-        )
+            y = fused.fused_flash_attention(
+                q, k, v, table=table, causal=causal, window=window
+            )
+        return sfu.guard.check_fused(softmax_key, y)
     if not causal and window is None:  # cross-attention (encdec)
         return flash_attention(q, k, v, causal=False, exp_fn=exp_fn,
                                unroll=cfg.unroll_scans)
@@ -814,6 +820,27 @@ def _fused_mlp_hidden(cfg: ModelConfig, params, x, plan):
     )
 
 
+def _guard_fused_mlp(cfg: ModelConfig, params, x, h, plan, key):
+    """sfu.guard checkpoint on the fused-MLP hidden state.  The fused kernel
+    consumes the pre-activation internally, so with an active collector the
+    clamp counter recomputes it in jnp against the table's fitted range —
+    a deliberate diagnostics-mode cost (documented in docs/plans.md); with
+    no collector this is the bare NaN-injection hook (a no-op unless armed).
+    Runs on the full (unsharded) hidden, outside any shard_map body."""
+    clamped = None
+    if sfu.guard.active():
+        table = plan.fused_table(key)
+        lo, hi = float(table.bp[0]), float(table.bp[-1])
+        if cfg.mlp_type in ("swiglu", "geglu"):
+            z = x @ params["w_gate"].astype(x.dtype)
+        else:
+            z = x @ params["w_in"].astype(x.dtype)
+            if "b_in" in params:
+                z = z + params["b_in"].astype(x.dtype)
+        clamped = jnp.sum((z < lo) | (z > hi), dtype=jnp.int32)
+    return sfu.guard.check_fused(key, h, clamped)
+
+
 def mlp(cfg: ModelConfig, params, x, plan=None):
     """Dense FFN: swiglu / geglu / plain, activation via the activation plan
     (site ``"mlp:<activation>"``).
@@ -832,6 +859,7 @@ def mlp(cfg: ModelConfig, params, x, plan=None):
     # force an activation all-gather per gemm (measured: 6.4 GB/layer on
     # qwen2.5-32b, see EXPERIMENTS.md Sec. Perf).
     if h is not None:
+        h = _guard_fused_mlp(cfg, params, x, h, plan, key)
         h = constrain(h, "batch", None, "mlp")
     elif cfg.mlp_type in ("swiglu", "geglu"):
         act = plan.act(key)

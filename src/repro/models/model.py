@@ -99,7 +99,11 @@ class Model:
     # -- paged serving (repro.serving; decoder-only transformers) -----------
     def make_paged_cache(self, num_pages: int, page_size: int):
         if self.cfg.is_encoder_decoder:
-            raise ValueError("paged serving covers decoder-only models")
+            from repro.serving.resilience import UnsupportedCacheError
+
+            raise UnsupportedCacheError(
+                "paged serving covers decoder-only models"
+            )
         return transformer.make_paged_cache(self.cfg, num_pages, page_size)
 
     def prefill_paged(self, params, tokens, cache, page_table, lengths):

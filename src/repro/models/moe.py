@@ -65,9 +65,17 @@ def moe_layer(cfg: ModelConfig, params, x, plan=None):
     act = None if fused_table is not None else plan.act(key)
     rules = _ACTIVE.get()
     if rules is not None and rules.mesh is not None and rules.mesh.size > 1:
-        return _moe_layer_shardmap(cfg, params, x, rules, act,
-                                   fused_table=fused_table)
-    return _moe_layer_local(cfg, params, x, act, fused_table=fused_table)
+        y, aux = _moe_layer_shardmap(cfg, params, x, rules, act,
+                                     fused_table=fused_table)
+    else:
+        y, aux = _moe_layer_local(cfg, params, x, act, fused_table=fused_table)
+    if fused_table is not None:
+        # sfu.guard checkpoint on the combined expert output — placed here
+        # (outside the shard_map body) so collector emissions never capture
+        # per-shard tracers; a NaN in any expert propagates through the
+        # weighted combine, so finite-checking the combine covers the site
+        y = sfu.guard.check_fused(key, y)
+    return y, aux
 
 
 def _moe_layer_shardmap(cfg: ModelConfig, params, x, rules, act,

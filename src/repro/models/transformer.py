@@ -323,26 +323,35 @@ def _scan_with_cache(cfg: ModelConfig, params, h, cache, pos, paged=None):
     plan = sfu.plan_for(cfg)
 
     # `paged` (page_table + kv_len) is shared by every layer, so it enters
-    # the scan body as a closure constant, not a scanned xs leaf
+    # the scan body as a closure constant, not a scanned xs leaf.
+    # sfu.guard counters emitted inside the scan body would leak inner-trace
+    # tracers into the engine's collector, so the body reroutes them through
+    # guard.capture() and threads them out as scan ys; guard.emit sums the
+    # stacked (n_periods, 2) leaves back into the ambient collector.
     def period_fn(h, xs):
         stacked, cache_p = xs
         new_caches = []
-        for j in range(period):
-            h, nc, _ = block_apply(
-                cfg, stacked[j], h, *kinds[j], cache=cache_p[j], pos=pos,
-                plan=plan, paged=paged,
-            )
-            new_caches.append(nc)
-        return h, new_caches
+        with sfu.guard.capture() as cap:
+            for j in range(period):
+                h, nc, _ = block_apply(
+                    cfg, stacked[j], h, *kinds[j], cache=cache_p[j], pos=pos,
+                    plan=plan, paged=paged,
+                )
+                new_caches.append(nc)
+        return h, (new_caches, cap.result())
 
     if cfg.scan_layers:
-        h, new_cache = jax.lax.scan(period_fn, h, (params["layers"], cache))
+        h, (new_cache, gcounts) = jax.lax.scan(
+            period_fn, h, (params["layers"], cache)
+        )
+        sfu.guard.emit(gcounts)
         return h, new_cache
     n_periods = cfg.n_layers // period
     outs = []
     for i in range(n_periods):
         xs = jax.tree_util.tree_map(lambda x: x[i], (params["layers"], cache))
-        h, nc = period_fn(h, xs)
+        h, (nc, gcounts) = period_fn(h, xs)
+        sfu.guard.emit(gcounts)
         outs.append(nc)
     new_cache = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
     return h, new_cache
@@ -375,12 +384,16 @@ def make_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int):
     (n_periods, Hkv, num_pages, page_size, dh) — but the pools are SHARED
     across requests through a page table rather than sliced per batch row.
     Paged serving covers global-attention stacks only (ring-buffer local
-    layers and SSM states have no paged layout); mixed stacks raise here,
-    and the engine falls back to the dense cache path.
+    layers and SSM states have no paged layout); mixed stacks raise the
+    typed :class:`~repro.serving.resilience.UnsupportedCacheError` (a
+    ``ValueError`` subclass) so front-ends can fall back to the dense cache
+    path per-config instead of dying.
     """
+    from repro.serving.resilience import UnsupportedCacheError
+
     for mixer, _ in cfg.layer_kinds:
         if mixer != "attn":
-            raise ValueError(
+            raise UnsupportedCacheError(
                 f"paged serving supports global-attention mixers only, got "
                 f"{mixer!r} in layer_kinds"
             )

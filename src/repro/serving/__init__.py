@@ -6,8 +6,15 @@ continuous-batching scheduler that admits/evicts between decode steps at
 fixed batch shapes (:mod:`.scheduler`), and an engine that drives prefill
 through the fused flash kernel and decode through the split-KV paged
 decoding kernel (:mod:`.engine`).
+
+The resilience layer (:mod:`.resilience`, :mod:`.faults`; docs/serving.md
+"Resilience") adds optimistic admission with recompute preemption
+(``policy="optimistic"``), request deadlines and bounded step retries,
+typed request validation, deterministic fault injection, and the
+``sfu.guard`` numerical guardrails on the PWL path.
 """
 from .engine import PagedServingEngine
+from .faults import FAULT_KINDS, FaultInjector, FaultSpec, chaos_specs
 from .kv_cache import (
     SENTINEL_PAGE,
     PageAllocator,
@@ -16,17 +23,47 @@ from .kv_cache import (
     make_page_pool,
     write_prompt_pages,
 )
-from .scheduler import ContinuousBatchingScheduler, GenRequest, GenResult
+from .resilience import (
+    FINISH_REASONS,
+    POLICIES,
+    PagePoolExhausted,
+    RequestRejected,
+    RetryPolicy,
+    ServingError,
+    SimulatedKernelFailure,
+    StepRetriesExhausted,
+    UnsupportedCacheError,
+)
+from .scheduler import (
+    Admission,
+    ContinuousBatchingScheduler,
+    GenRequest,
+    GenResult,
+)
 
 __all__ = [
     "SENTINEL_PAGE",
     "PageAllocator",
     "PagedServingEngine",
     "ContinuousBatchingScheduler",
+    "Admission",
     "GenRequest",
     "GenResult",
     "append_kv",
     "gather_pages",
     "make_page_pool",
     "write_prompt_pages",
+    "FINISH_REASONS",
+    "POLICIES",
+    "FAULT_KINDS",
+    "FaultInjector",
+    "FaultSpec",
+    "chaos_specs",
+    "PagePoolExhausted",
+    "RequestRejected",
+    "RetryPolicy",
+    "ServingError",
+    "SimulatedKernelFailure",
+    "StepRetriesExhausted",
+    "UnsupportedCacheError",
 ]

@@ -52,6 +52,8 @@ from repro.distributed import shard_fused as shf
 from repro.distributed.sharding import active_mesh_rules
 from repro.kernels._backend import should_interpret
 
+from .resilience import PagePoolExhausted
+
 # page 0 is the sentinel: never allocated, target of every unallocated
 # page-table entry (inactive slots append here; skipped splits gather here)
 SENTINEL_PAGE = 0
@@ -76,9 +78,17 @@ class PageAllocator:
     LIFO recycling is deliberate: freed pages are reused immediately, so a
     realistic admit/evict workload produces *fragmented* (non-contiguous,
     non-monotone) page tables — the case the parity tests pin.
+
+    ``faults`` optionally holds a :class:`repro.serving.faults.FaultInjector`
+    whose armed ``alloc_exhaust`` specs make :meth:`alloc` raise even with
+    free pages — the deterministic trigger for the engine's preemption path.
+    Exhaustion (real or injected) raises the typed
+    :class:`~repro.serving.resilience.PagePoolExhausted` (a ``RuntimeError``
+    subclass, message unchanged).
     """
 
     num_pages: int
+    faults: object = None
 
     def __post_init__(self):
         # page 0 reserved as the sentinel
@@ -88,11 +98,16 @@ class PageAllocator:
     def num_free(self) -> int:
         return len(self._free)
 
-    def alloc(self, n: int) -> list[int]:
+    def alloc(self, n: int, scope: str = "") -> list[int]:
         if n == 0:
             return []
+        if self.faults is not None and self.faults.alloc_should_fail(scope):
+            raise PagePoolExhausted(
+                f"page pool exhausted (injected fault, scope={scope or 'any'}):"
+                f" asked {n}, {len(self._free)} free of {self.num_pages}"
+            )
         if n > len(self._free):
-            raise RuntimeError(
+            raise PagePoolExhausted(
                 f"page pool exhausted: asked {n}, {len(self._free)} free of "
                 f"{self.num_pages} (admission control should prevent this)"
             )

@@ -45,6 +45,7 @@ sites via :func:`compile_plan`; anything per-site goes through
   per-site exemption / depth / dtype      ``act_site_specs`` pin
   ======================================  =================================
 """
+from . import guard
 from .plan import (
     FUSED_SITES,
     SITE_MLP,
@@ -102,4 +103,5 @@ __all__ = [
     "warn_fused_fallback",
     "reset_fused_fallback_warnings",
     "reset_all_warnings",
+    "guard",
 ]

@@ -1,0 +1,192 @@
+"""sfu.guard — opt-in numerical guardrails for the PWL activation path.
+
+A PWL table is only fitted over a finite breakpoint range; inputs outside it
+are clamped to the end segments, and a corrupted table (or an injected fault)
+can emit non-finite values that would silently poison a whole continuous
+batch.  This module provides the trace-time plumbing for:
+
+- **clamp counters**: per-site counts of inputs that fell outside the fitted
+  table range ``[bp[0], bp[-1]]``;
+- **finite checks**: per-site counts of non-finite outputs at the fused-kernel
+  checkpoints (MLP epilogue, MoE combine, PWL softmax/attention outputs);
+- **NaN fault injection**: a trace-time context that corrupts one element of
+  a chosen site's output (used by ``serving.faults``, which lives above this
+  module in the import graph — the hook lives here so ``models/layers.py``
+  never imports ``repro.serving``).
+
+Counters are collected through a context stack: the serving engine opens
+``collecting()`` around a jitted step, the model's layer stack emits counts
+into it, and the engine reads them back as a ``{site: int32[2]}`` dict (index
+0 = clamped inputs, index 1 = non-finite outputs) returned from the jit.
+``jax.lax.scan`` layer stacks cannot emit into an outer-trace collector
+directly (tracer leak), so ``transformer._scan_with_cache`` reroutes the
+scan body through ``capture()`` and threads the counts out as scan ys.
+
+When no collector is active every hook is a no-op closure (zero compiled
+overhead) — the guard costs nothing unless the engine asked for it.
+"""
+from __future__ import annotations
+
+import contextlib
+import warnings
+
+import jax.numpy as jnp
+
+# Context stacks.  Trace time is single-threaded per process here; plain
+# module lists mirror how `layers._ACTIVE` rules already work in this repo.
+_COLLECTORS: list["GuardCollector"] = []
+_FORCE_NAN: list[str] = []
+
+
+class GuardCollector:
+    """Accumulates per-site ``int32[2]`` = [clamped, nonfinite] counts."""
+
+    def __init__(self):
+        self._counts: dict = {}
+
+    def add(self, key: str, clamped, nonfinite) -> None:
+        rec = jnp.stack([
+            jnp.asarray(clamped, jnp.int32),
+            jnp.asarray(nonfinite, jnp.int32),
+        ])
+        self.add_raw(key, rec)
+
+    def add_raw(self, key: str, rec) -> None:
+        prev = self._counts.get(key)
+        self._counts[key] = rec if prev is None else prev + rec
+
+    def result(self) -> dict:
+        return dict(self._counts)
+
+
+def active() -> bool:
+    return bool(_COLLECTORS)
+
+
+def _top():
+    return _COLLECTORS[-1] if _COLLECTORS else None
+
+
+@contextlib.contextmanager
+def collecting():
+    """Engine-level scope: collect guard counts emitted while tracing."""
+    col = GuardCollector()
+    _COLLECTORS.append(col)
+    try:
+        yield col
+    finally:
+        _COLLECTORS.pop()
+
+
+class _NullCapture:
+    def result(self):
+        return {}
+
+
+@contextlib.contextmanager
+def capture():
+    """Scan-body scope: reroute emissions into a fresh collector so the
+    caller can thread them out of ``jax.lax.scan`` as ys (the ambient
+    collector would leak inner-trace tracers).  No-op when no collector is
+    active."""
+    if not _COLLECTORS:
+        yield _NullCapture()
+        return
+    col = GuardCollector()
+    _COLLECTORS.append(col)
+    try:
+        yield col
+    finally:
+        _COLLECTORS.pop()
+
+
+def emit(counts: dict) -> None:
+    """Re-emit captured counts into the ambient collector (post-scan).
+
+    Stacked leaves (shape ``(n_periods, 2)`` from scan ys) are summed over
+    the leading axis."""
+    col = _top()
+    if col is None:
+        return
+    for key, rec in counts.items():
+        rec = jnp.asarray(rec)
+        if rec.ndim == 2:
+            rec = rec.sum(axis=0)
+        col.add_raw(key, rec)
+
+
+@contextlib.contextmanager
+def force_nan(site: str):
+    """Trace-time fault hook: while active, ``check_fused(site, y)`` replaces
+    one element of ``y`` with NaN.  Used by ``serving.faults``."""
+    _FORCE_NAN.append(site)
+    try:
+        yield
+    finally:
+        _FORCE_NAN.pop()
+
+
+def _maybe_corrupt(key: str, y):
+    if _FORCE_NAN and _FORCE_NAN[-1] == key:
+        flat = y.reshape(-1)
+        flat = flat.at[0].set(jnp.nan)
+        return flat.reshape(y.shape)
+    return y
+
+
+def check_fused(key: str, y, clamped=None):
+    """Guard checkpoint at a fused-kernel output.
+
+    Applies any armed NaN fault for ``key`` (even with no collector, so
+    corruption propagates realistically when the guard is off), then — under
+    an active collector — counts non-finite outputs.  ``clamped`` is an
+    optional pre-computed clamp count (fused kernels consume the
+    pre-activation internally; callers that can recompute it cheaply pass it
+    here, others report 0)."""
+    y = _maybe_corrupt(key, y)
+    col = _top()
+    if col is not None:
+        nonfinite = jnp.sum(~jnp.isfinite(y), dtype=jnp.int32)
+        col.add(key, 0 if clamped is None else clamped, nonfinite)
+    return y
+
+
+def wrap_elementwise(key: str, fn, lo: float, hi: float):
+    """Wrap an elementwise activation so that, under an active collector,
+    inputs outside the fitted table range ``[lo, hi]`` and non-finite
+    outputs are counted.  The counts never feed the output value, so
+    autodiff through the wrapped fn is unchanged."""
+
+    def guarded(x):
+        y = fn(x)
+        col = _top()
+        if col is not None:
+            clamped = jnp.sum((x < lo) | (x > hi), dtype=jnp.int32)
+            nonfinite = jnp.sum(~jnp.isfinite(y), dtype=jnp.int32)
+            col.add(key, clamped, nonfinite)
+        return y
+
+    return guarded
+
+
+# Warn-once latch for the degradation path (reset via sfu.reset_all_warnings).
+_WARNED: set = set()
+
+
+def warn_nonfinite(key: str, degraded_to: str) -> None:
+    """Warn once per site that its output went non-finite and the step is
+    being re-run with a degraded impl.  The message deliberately avoids the
+    word "fused" so zero-fallback warning filters don't count it."""
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(
+        f"sfu.guard: non-finite values detected in output of activation "
+        f"site {key!r}; re-running the step with impl={degraded_to!r} for "
+        f"that site (recorded in the engine health summary)",
+        stacklevel=2,
+    )
+
+
+def reset_guard_warnings() -> None:
+    _WARNED.clear()

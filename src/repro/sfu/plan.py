@@ -108,8 +108,9 @@ def reset_fused_fallback_warnings() -> None:
 
 def reset_all_warnings() -> None:
     """Reset every warn-once latch in one call: the fused-fallback warnings
-    above AND the sharding sanitize warnings
-    (``distributed.sharding.reset_sanitize_warnings``).  Session-scoped
+    above, the sharding sanitize warnings
+    (``distributed.sharding.reset_sanitize_warnings``), and the guard
+    non-finite warnings (``sfu.guard.reset_guard_warnings``).  Session-scoped
     consumers — the serving engine at ``run()`` start, tests that assert
     under ``warnings.simplefilter("error")`` — previously had to know about
     and call each latch individually; this is the one entry point."""
@@ -117,6 +118,9 @@ def reset_all_warnings() -> None:
     from repro.distributed.sharding import reset_sanitize_warnings
 
     reset_sanitize_warnings()
+    from . import guard
+
+    guard.reset_guard_warnings()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,7 +170,17 @@ class ActivationPlan:
                 key, "no fused producer kernel covers this site; evaluating "
                 "the PWL table elementwise (impl='jnp' semantics)"
             )
-        return resolve_spec(spec, store)
+        fn = resolve_spec(spec, store)
+        if spec.impl == "exact":
+            return fn
+        # table-backed impls get the sfu.guard clamp/finite counters — a
+        # no-op closure unless an engine opened guard.collecting()
+        from . import guard
+
+        table = (store or get_store()).get(spec)
+        return guard.wrap_elementwise(
+            key, fn, float(table.bp[0]), float(table.bp[-1])
+        )
 
     def fused_table(self, key: str, store: Optional[TableStore] = None) -> Optional[pwl.PWLTable]:
         """Table for the fused-epilogue path, or None when the producing

@@ -1,0 +1,482 @@
+"""Resilient serving (ISSUE 10): preemption-and-restore, deadlines, fault
+injection, and the sfu.guard numerical guardrails.
+
+Pins the acceptance criteria:
+
+* **Preemption parity** — an optimistic-policy session at an oversubscribed
+  page budget preempts and restores requests, and every request still emits
+  the exact greedy tokens of a reserved-policy run with ample pages.
+* **Guardrail degradation** — with ``guard=True`` and an injected NaN at one
+  plan site, the step finishes via a degraded re-run (warned once, counters
+  and incidents visible in the health summary) and the session's tokens
+  match the fault-free run.
+* **Typed validation** — ``submit`` raises ``RequestRejected`` with a
+  machine-readable reason; ``make_paged_cache`` raises the typed
+  ``UnsupportedCacheError`` (still a ValueError matching "global-attention"
+  for back-compat).
+* **Scheduler invariants** — random admit/grow/preempt/evict interleavings
+  never double-free a page, never leak a reservation, and always satisfy
+  ``free + held == num_pages - 1`` (property-based when hypothesis is
+  available, fixed-seed sweep otherwise).
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+import repro  # noqa: F401
+from repro import sfu
+from repro.configs import get_reduced_config
+from repro.models import Model
+from repro.serving import (
+    ContinuousBatchingScheduler,
+    FaultInjector,
+    FaultSpec,
+    GenRequest,
+    PagedServingEngine,
+    PagePoolExhausted,
+    RequestRejected,
+    RetryPolicy,
+    UnsupportedCacheError,
+    chaos_specs,
+)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - hypothesis is optional
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# shared tiny model session
+# ---------------------------------------------------------------------------
+
+PROMPT_LEN = 30  # 2 pages at page_size 16; grows to 3 pages mid-decode
+MAX_NEW = 8
+
+
+@pytest.fixture(scope="module")
+def session():
+    cfg = get_reduced_config("repro-100m", act_impl="fused")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (3, PROMPT_LEN), 0,
+                           cfg.vocab_size),
+        dtype=np.int32,
+    )
+    return cfg, model, params, prompts
+
+
+def _requests(prompts, deadline_for=None, deadline=2):
+    out = []
+    for i in range(len(prompts)):
+        rid = f"req{i}"
+        out.append(GenRequest(
+            request_id=rid, prompt=list(map(int, prompts[i])),
+            max_new_tokens=MAX_NEW,
+            deadline_ticks=deadline if rid == deadline_for else None,
+        ))
+    return out
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("page_size", 16)
+    kw.setdefault("max_context", PROMPT_LEN + MAX_NEW + 16)
+    return PagedServingEngine(model, params, **kw)
+
+
+@pytest.fixture(scope="module")
+def reference(session):
+    """Fault-free reserved-policy run with ample pages: the parity oracle."""
+    cfg, model, params, prompts = session
+    eng = _engine(model, params)
+    res = eng.run(_requests(prompts))
+    return {r.request_id: list(r.tokens) for r in res}
+
+
+# ---------------------------------------------------------------------------
+# submit validation (satellite: typed request validation)
+# ---------------------------------------------------------------------------
+
+class TestSubmitValidation:
+    def _sched(self, num_pages=16):
+        return ContinuousBatchingScheduler(2, 16, num_pages)
+
+    def test_empty_prompt(self):
+        with pytest.raises(RequestRejected) as e:
+            self._sched().submit(GenRequest("r", [], 4))
+        assert e.value.reason == "empty_prompt"
+        assert e.value.request_id == "r"
+
+    def test_nonpositive_max_new(self):
+        with pytest.raises(RequestRejected) as e:
+            self._sched().submit(GenRequest("r", [1, 2], 0))
+        assert e.value.reason == "nonpositive_max_new_tokens"
+
+    def test_nonpositive_deadline(self):
+        with pytest.raises(RequestRejected) as e:
+            self._sched().submit(GenRequest("r", [1], 4, deadline_ticks=0))
+        assert e.value.reason == "nonpositive_deadline"
+
+    def test_exceeds_page_capacity(self):
+        # pool of 4 pages = 3 usable (sentinel); 64+16 tokens needs 5 pages
+        with pytest.raises(RequestRejected) as e:
+            self._sched(num_pages=4).submit(GenRequest("r", [1] * 64, 16))
+        assert e.value.reason == "exceeds_page_capacity"
+
+    def test_rejection_is_recorded_not_fatal(self, session):
+        cfg, model, params, prompts = session
+        eng = _engine(model, params)
+        reqs = _requests(prompts[:1]) + [GenRequest("bad", [], 4)]
+        res = eng.run(reqs)
+        assert [r.request_id for r in res] == ["req0"]
+        h = eng.health_summary()
+        assert [r["request_id"] for r in h["rejected"]] == ["bad"]
+        assert h["rejected"][0]["reason"] == "empty_prompt"
+
+
+# ---------------------------------------------------------------------------
+# tentpole: optimistic admission + recompute preemption, greedy parity
+# ---------------------------------------------------------------------------
+
+class TestPreemption:
+    def test_optimistic_oversubscribed_parity(self, session, reference):
+        """2 slots x worst-case 3 pages = 6 > 5 usable pages: optimistic
+        admission must preempt mid-decode, restore, and still match the
+        reserved ample-pages run token for token."""
+        cfg, model, params, prompts = session
+        eng = _engine(model, params, policy="optimistic", num_pages=6,
+                      max_preemptions=32)
+        res = {r.request_id: r for r in eng.run(_requests(prompts))}
+        h = eng.health_summary()
+        assert h["preemptions"] >= 1
+        assert h["replayed_prefill_tokens"] > 0
+        assert any(r.preemptions > 0 for r in res.values())
+        for rid, toks in reference.items():
+            assert res[rid].finish_reason == "length"
+            assert list(res[rid].tokens) == toks, rid
+
+    def test_reserved_never_preempts_at_same_budget(self, session, reference):
+        cfg, model, params, prompts = session
+        eng = _engine(model, params, policy="reserved", num_pages=6)
+        res = {r.request_id: r for r in eng.run(_requests(prompts))}
+        assert eng.health_summary()["preemptions"] == 0
+        for rid, toks in reference.items():
+            assert list(res[rid].tokens) == toks
+
+    def test_injected_grow_fault_preempts_with_parity(self, session,
+                                                      reference):
+        """Ample pages, but one injected grow-time exhaustion: the youngest
+        active request is preempted, restored, and parity still holds."""
+        cfg, model, params, prompts = session
+        inj = FaultInjector([FaultSpec("alloc_exhaust", step=1, site="grow")])
+        eng = _engine(model, params, policy="optimistic", faults=inj)
+        res = {r.request_id: r for r in eng.run(_requests(prompts))}
+        h = eng.health_summary()
+        assert h["preemptions"] == 1
+        assert [f["kind"] for f in h["faults_fired"]] == ["alloc_exhaust"]
+        for rid, toks in reference.items():
+            assert list(res[rid].tokens) == toks
+
+    def test_unrecoverable_after_max_preemptions(self, session):
+        cfg, model, params, prompts = session
+        inj = FaultInjector(
+            [FaultSpec("alloc_exhaust", step=1, site="grow", count=99)])
+        eng = _engine(model, params, policy="optimistic", faults=inj,
+                      max_preemptions=1)
+        res = eng.run(_requests(prompts))
+        reasons = {r.finish_reason for r in res}
+        assert "preempted_unrecoverable" in reasons
+        assert len(res) == len(prompts)  # nothing vanished, nothing crashed
+
+
+# ---------------------------------------------------------------------------
+# deadlines and budgets
+# ---------------------------------------------------------------------------
+
+class TestDeadlines:
+    def test_queued_request_times_out(self, session, reference):
+        """3 requests, 2 slots: the queued third request's 2-tick deadline
+        expires before a slot frees; the other two are unaffected."""
+        cfg, model, params, prompts = session
+        eng = _engine(model, params)
+        res = {r.request_id: r
+               for r in eng.run(_requests(prompts, deadline_for="req2"))}
+        assert res["req2"].finish_reason == "timeout"
+        assert res["req2"].tokens == []
+        assert res["req2"].admitted_at_step == -1
+        assert eng.health_summary()["timeouts"] == 1
+        for rid in ("req0", "req1"):
+            assert list(res[rid].tokens) == reference[rid]
+
+    def test_active_request_times_out_with_partial_tokens(self, session,
+                                                          reference):
+        cfg, model, params, prompts = session
+        eng = _engine(model, params, max_slots=4)
+        res = {r.request_id: r
+               for r in eng.run(_requests(prompts, deadline_for="req0",
+                                          deadline=3))}
+        assert res["req0"].finish_reason == "timeout"
+        assert 0 < len(res["req0"].tokens) < MAX_NEW
+        assert list(res["req0"].tokens) == reference["req0"][
+            : len(res["req0"].tokens)]
+
+    def test_wall_clock_budget(self, session):
+        cfg, model, params, prompts = session
+        eng = _engine(model, params, wall_clock_budget_s=0.0)
+        res = eng.run(_requests(prompts))
+        assert res and all(r.finish_reason == "timeout" for r in res)
+        kinds = {i["kind"] for i in eng.health_summary()["incidents"]}
+        assert "wall_clock_budget_exhausted" in kinds
+
+
+# ---------------------------------------------------------------------------
+# fault injector mechanics + retry / drop-tick recovery
+# ---------------------------------------------------------------------------
+
+class TestFaults:
+    def test_spec_validation(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultSpec("nope", step=0)
+        with pytest.raises(ValueError, match="count"):
+            FaultSpec("nan", step=0, count=0)
+
+    def test_fires_at_first_opportunity_at_or_after_step(self):
+        inj = FaultInjector([FaultSpec("alloc_exhaust", step=3)])
+        inj.set_step(1)
+        assert not inj.alloc_should_fail()
+        inj.set_step(5)  # no opportunity happened at exactly step 3
+        assert inj.alloc_should_fail()
+        assert not inj.alloc_should_fail()  # count=1: spent
+        assert inj.exhausted
+        assert inj.fired == [{"kind": "alloc_exhaust", "site": "",
+                              "armed_step": 3, "fired_step": 5}]
+
+    def test_alloc_scope(self):
+        inj = FaultInjector([FaultSpec("alloc_exhaust", step=0, site="grow")])
+        inj.set_step(0)
+        assert not inj.alloc_should_fail(scope="admit")
+        assert inj.alloc_should_fail(scope="grow")
+
+    def test_chaos_specs_deterministic(self):
+        a = chaos_specs(7, "mlp:gelu_tanh")
+        assert a == chaos_specs(7, "mlp:gelu_tanh")
+        assert {s.kind for s in a} == {"alloc_exhaust", "nan"}
+        # grow-scoped alloc faults must arm before the first page-boundary
+        # crossing or they never get an opportunity to fire
+        assert all(s.step <= 2 for s in a if s.kind == "alloc_exhaust")
+
+    def test_kernel_fail_retries_then_succeeds(self, session, reference):
+        cfg, model, params, prompts = session
+        inj = FaultInjector([FaultSpec("kernel_fail", step=1, count=2)])
+        eng = _engine(model, params, faults=inj,
+                      retry=RetryPolicy(max_retries=2, backoff_s=0.0))
+        res = {r.request_id: r for r in eng.run(_requests(prompts))}
+        h = eng.health_summary()
+        assert h["step_retries"] == 2
+        for rid, toks in reference.items():
+            assert list(res[rid].tokens) == toks
+
+    def test_kernel_fail_exhausts_retries_without_crashing(self, session):
+        cfg, model, params, prompts = session
+        inj = FaultInjector([FaultSpec("kernel_fail", step=1, count=99)])
+        eng = _engine(model, params, faults=inj,
+                      retry=RetryPolicy(max_retries=1, backoff_s=0.0))
+        res = eng.run(_requests(prompts))
+        assert len(res) == len(prompts)
+        assert all(r.finish_reason == "preempted_unrecoverable" for r in res)
+        kinds = {i["kind"] for i in eng.health_summary()["incidents"]}
+        assert "step_failed" in kinds
+
+    def test_drop_tick_replays_without_drift(self, session, reference):
+        cfg, model, params, prompts = session
+        inj = FaultInjector([FaultSpec("drop_tick", step=2)])
+        eng = _engine(model, params, faults=inj)
+        res = {r.request_id: r for r in eng.run(_requests(prompts))}
+        assert eng.health_summary()["dropped_ticks"] == 1
+        for rid, toks in reference.items():
+            assert list(res[rid].tokens) == toks
+
+
+# ---------------------------------------------------------------------------
+# sfu.guard: clamp counters + non-finite degradation
+# ---------------------------------------------------------------------------
+
+class TestGuard:
+    def test_wrap_elementwise_counts(self):
+        import jax.numpy as jnp
+
+        fn = sfu.guard.wrap_elementwise("site", jnp.tanh, -2.0, 2.0)
+        x = jnp.asarray([-3.0, 0.0, 1.0, 5.0])
+        with sfu.guard.collecting() as col:
+            y = fn(x)
+            counts = col.result()
+        np.testing.assert_allclose(y, np.tanh([-3.0, 0.0, 1.0, 5.0]),
+                                   rtol=1e-6)
+        assert np.asarray(counts["site"]).tolist() == [2, 0]
+
+    def test_no_collector_is_passthrough(self):
+        import jax.numpy as jnp
+
+        fn = sfu.guard.wrap_elementwise("site", jnp.tanh, -2.0, 2.0)
+        assert not sfu.guard.active()
+        np.testing.assert_allclose(fn(jnp.asarray([9.0])), np.tanh(9.0),
+                                   rtol=1e-6)
+
+    def test_clamp_counters_surface_in_health(self, session):
+        cfg, model, params, prompts = session
+        eng = _engine(model, params, guard=True)
+        eng.run(_requests(prompts))
+        h = eng.health_summary()
+        key = sfu.site_key(sfu.SITE_MLP, cfg.activation)
+        assert key in h["clamped"]  # the site is being watched
+        assert h["nonfinite"].get(key, 0) == 0
+
+    def test_nan_degradation_recovers_with_parity(self, session, reference):
+        """Acceptance: guard on + NaN injected at one site -> the step
+        finishes via a degraded re-run, warns once, counters and incidents
+        are visible, and the tokens match the fault-free run."""
+        cfg, model, params, prompts = session
+        key = sfu.site_key(sfu.SITE_MLP, cfg.activation)
+        inj = FaultInjector([FaultSpec("nan", step=2, site=key)])
+        eng = _engine(model, params, guard=True, faults=inj)
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            res = {r.request_id: r for r in eng.run(_requests(prompts))}
+        h = eng.health_summary()
+        assert h["nonfinite"][key] >= 1
+        assert h["nonfinite_recoveries"] == {key: 1}
+        kinds = [i["kind"] for i in h["incidents"]]
+        assert "nan_injected" in kinds and "nonfinite_output" in kinds
+        guard_warns = [w for w in caught
+                       if "sfu.guard" in str(w.message)]
+        assert len(guard_warns) == 1  # warn-once per site per session
+        assert not any("fused" in str(w.message).lower() for w in caught)
+        for rid, toks in reference.items():
+            assert list(res[rid].tokens) == toks
+
+    def test_nan_propagates_when_guard_off(self, session, reference):
+        """Without the guard the corruption is real: the session still runs
+        to completion but the poisoned request's tokens diverge."""
+        cfg, model, params, prompts = session
+        key = sfu.site_key(sfu.SITE_MLP, cfg.activation)
+        inj = FaultInjector([FaultSpec("nan", step=2, site=key)])
+        eng = _engine(model, params, guard=False, faults=inj)
+        res = {r.request_id: r for r in eng.run(_requests(prompts))}
+        assert any(list(res[rid].tokens) != toks
+                   for rid, toks in reference.items())
+
+
+# ---------------------------------------------------------------------------
+# typed cache errors (satellite) — back-compat match strings pinned
+# ---------------------------------------------------------------------------
+
+class TestUnsupportedCache:
+    def test_typed_and_valueerror_compat(self):
+        cfg = get_reduced_config("gemma3-1b")
+        model = Model(cfg)
+        with pytest.raises(UnsupportedCacheError):
+            model.make_paged_cache(8, 16)
+        with pytest.raises(ValueError, match="global-attention"):
+            model.make_paged_cache(8, 16)
+
+
+# ---------------------------------------------------------------------------
+# scheduler invariants (satellite: property-based when hypothesis exists)
+# ---------------------------------------------------------------------------
+
+N_PAGES = 12
+
+
+def _check_invariants(sched):
+    alloc = sched.allocator
+    held = [p for s in sched.slots if s is not None for p in s.pages]
+    assert len(held) == len(set(held)), "page held twice"
+    assert 0 not in held, "sentinel page allocated"
+    assert len(held) + alloc.num_free == N_PAGES - 1, "pages leaked"
+    if sched.policy == "reserved":
+        expect = sum(sched._worst(s.request) - len(s.pages)
+                     for s in sched.slots if s is not None)
+        assert sched._reserved == expect, "reservation leak"
+        assert sched._reserved >= 0
+    else:
+        assert sched._reserved == 0
+
+
+def _run_ops(policy, ops):
+    """Drive a scheduler through a scripted op sequence, checking the page
+    and reservation invariants after every op.  Ops are (code, arg) pairs;
+    every op is made applicable by clamping to the current state."""
+    sched = ContinuousBatchingScheduler(3, 4, N_PAGES, policy=policy,
+                                        max_preemptions=2)
+    rid = 0
+    for code, arg in ops:
+        if code == 0:  # submit (prompt 1..8 tokens, max_new 1..4)
+            try:
+                sched.submit(GenRequest(f"r{rid}", [1] * (1 + arg % 8),
+                                        1 + arg % 4))
+                rid += 1
+            except RequestRejected:
+                pass
+        elif code == 1:
+            for adm in sched.admit():
+                sched.record_prefill_token(adm.slot, 7)
+        elif code == 2:  # grow + append one token everywhere
+            for i in list(sched.active_slots()):
+                try:
+                    sched.grow(i)
+                except PagePoolExhausted:
+                    v = sched.youngest_active()
+                    if v is not None:
+                        sched.preempt(v)
+                    continue
+                if sched.slots[i] is not None:
+                    if sched.append_token(i, 7):
+                        sched.evict(i)
+            sched.tick()
+        elif code == 3:  # evict one active slot
+            act = sched.active_slots()
+            if act:
+                sched.evict(act[arg % len(act)])
+        elif code == 4:  # preempt the youngest
+            v = sched.youngest_active()
+            if v is not None:
+                sched.preempt(v)
+        _check_invariants(sched)
+    # drain: everything left must evict cleanly back to an empty pool
+    for i in list(sched.active_slots()):
+        sched.evict(i)
+    _check_invariants(sched)
+    assert sched.allocator.num_free == N_PAGES - 1
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        policy=st.sampled_from(["reserved", "optimistic"]),
+        ops=st.lists(
+            st.tuples(st.integers(0, 4), st.integers(0, 7)),
+            min_size=1, max_size=40,
+        ),
+    )
+    def test_scheduler_invariants_property(policy, ops):
+        _run_ops(policy, ops)
+
+else:  # pragma: no cover - exercised only without hypothesis
+
+    @pytest.mark.parametrize("seed", range(25))
+    @pytest.mark.parametrize("policy", ["reserved", "optimistic"])
+    def test_scheduler_invariants_property(policy, seed):
+        import random
+
+        rng = random.Random(seed)
+        ops = [(rng.randrange(5), rng.randrange(8))
+               for _ in range(rng.randrange(1, 40))]
+        _run_ops(policy, ops)
